@@ -1,0 +1,34 @@
+"""Paper Fig. 4 / Eq. 2 — BabelStream Copy/Mul/Add/Triad/Dot bandwidth."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.kernels  # noqa: F401  (registers all kernel backends)
+from benchmarks.common import emit, time_call
+from repro.core.metrics import babelstream_bytes
+from repro.core.portable import registry
+
+SIZE = 1 << 22          # CPU-scaled (paper: 2^25 on GPU)
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal(SIZE), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(SIZE), jnp.float32)
+    args = {"copy": (a,), "mul": (a,), "add": (a, b), "triad": (a, b),
+            "dot": (a, b)}
+    for op in ("copy", "mul", "add", "triad", "dot"):
+        k = registry.get(f"babelstream.{op}")
+        nbytes = babelstream_bytes(op, SIZE, 4)
+        t = k.time_backend(*args[op], backend="xla")
+        emit(f"babelstream.{op}.xla", t, f"{nbytes / t / 1e9:.2f}GB/s")
+        t = k.time_backend(*args[op], backend="pallas_interpret", iters=3,
+                           warmup=1)
+        emit(f"babelstream.{op}.pallas_interp", t,
+             f"{nbytes / t / 1e9:.2f}GB/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Shared benchmark helpers: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` lines (scaffold contract).
+`derived` carries the paper's figure of merit for that table (GB/s, GFLOP/s,
+ms, Phi, ...).
+
+CPU-host caveat (recorded once here, applies to all wall-clock numbers): this
+container measures XLA:CPU and Pallas-interpret executions — meaningful for
+*relative* comparisons and for exercising the Eq. 1-4 machinery, not as TPU
+performance.  TPU-projected numbers come from the dry-run roofline
+(EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import numpy as np
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def time_call(fn: Callable, *args, iters: int = 10, warmup: int = 2,
+              **kwargs) -> float:
+    """Median seconds per call, first (JIT) calls discarded (paper §3)."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, seconds: float, derived: str) -> None:
+    ROWS.append((name, seconds * 1e6, derived))
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)
+
+
+def header() -> None:
+    print("name,us_per_call,derived", flush=True)

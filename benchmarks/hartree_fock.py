@@ -1,0 +1,28 @@
+"""Paper Table 4 — Hartree-Fock twoel wall-clock vs system size.
+
+The paper reports raw kernel ms for He systems (a=64..1024, ngauss=3/6);
+CPU-scaled sizes here.  Derived column: wall-clock ms (the paper's FoM).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_call
+from repro.kernels.hartree_fock import ops, ref
+
+CASES = [(8, 3), (16, 3), (24, 3), (8, 6)]
+
+
+def run() -> None:
+    for natoms, ngauss in CASES:
+        pos = ref.helium_lattice(natoms)
+        dens = ref.initial_density(natoms)
+        t = time_call(ops.fock_xla, pos, dens, ngauss=ngauss, iters=5)
+        emit(f"hartree_fock.xla.a{natoms}.g{ngauss}", t, f"{t*1e3:.2f}ms")
+        t = time_call(ops.fock_pallas, pos, dens, ngauss=ngauss,
+                      interpret=True, iters=2, warmup=1)
+        emit(f"hartree_fock.pallas_interp.a{natoms}.g{ngauss}", t,
+             f"{t*1e3:.2f}ms")
+
+
+if __name__ == "__main__":
+    run()

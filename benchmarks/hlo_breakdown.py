@@ -1,0 +1,97 @@
+"""Per-instruction byte/flop breakdown of a dry-run cell — the 'profiler'.
+
+    PYTHONPATH=src python -m benchmarks.hlo_breakdown \
+        --arch granite-3-8b --shape train_4k [--variant attn_bf16] [--top 20]
+
+Walks the compiled HLO with loop multiplicity (core/hlo_cost.py) and prints
+the top HBM-traffic and collective contributors, annotated with the source
+op_name metadata — this is what the hypothesis->measure loop reads.
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import re
+from collections import defaultdict
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core import hlo_cost as H
+from repro.distributed.sharding import ShardingPolicy
+from repro.launch.dryrun import VARIANTS, build_cell
+from repro.launch.mesh import make_production_mesh
+
+import dataclasses
+
+_OPNAME = re.compile(r'op_name="([^"]+)"')
+
+
+def breakdown(arch, shape_name, variant="baseline", multi_pod=False):
+    cfg = get_config(arch)
+    if VARIANTS.get(variant):
+        cfg = dataclasses.replace(cfg, **VARIANTS[variant])
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = ShardingPolicy(mesh, cfg)
+    fn, args, in_sh, out_sh, donate, _ = build_cell(cfg, shape, mesh, policy)
+    kwargs = {"in_shardings": in_sh}
+    if out_sh is not None:
+        kwargs["out_shardings"] = out_sh
+    if donate:
+        kwargs["donate_argnums"] = donate
+    with mesh:
+        compiled = jax.jit(fn, **kwargs).lower(*args).compile()
+    mod = H._Module(compiled.as_text())
+
+    rows = []
+
+    def walk(comp, mult, in_fusion):
+        symbols = mod._symbols(comp)
+        for ins in mod.computations.get(comp, []):
+            c = mod.instr_cost(ins, comp, in_fusion, symbols)
+            if c.hbm_bytes or c.collective_bytes:
+                m = _OPNAME.search(ins.line)
+                tag = m.group(1) if m else ins.name
+                rows.append((c.hbm_bytes * mult, c.collective_bytes * mult,
+                             ins.opcode, ins.shape[:48], tag[-90:]))
+            if ins.opcode == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", ins.line)
+                tc = H._TRIP_COUNT.search(ins.line)
+                trip = int(tc.group(1)) if tc else 1
+                if bm:
+                    walk(bm.group(1), mult * trip, False)
+            elif ins.opcode == "fusion":
+                fm = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if fm:
+                    walk(fm.group(1), mult, True)
+
+    walk(mod.entry, 1.0, False)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--by", default="hbm", choices=["hbm", "collective"])
+    args = ap.parse_args()
+
+    rows = breakdown(args.arch, args.shape, args.variant)
+    key = 0 if args.by == "hbm" else 1
+    rows.sort(key=lambda r: -r[key])
+    tot_h = sum(r[0] for r in rows)
+    tot_c = sum(r[1] for r in rows)
+    print(f"total per-chip: hbm {tot_h/2**30:.1f} GiB  "
+          f"collective {tot_c/2**30:.1f} GiB")
+    print(f"{'hbm GiB':>9} {'coll GiB':>9}  opcode           shape/op")
+    for h, c, op, shp, tag in rows[:args.top]:
+        print(f"{h/2**30:9.2f} {c/2**30:9.2f}  {op:16s} {shp:48s} {tag}")
+
+
+if __name__ == "__main__":
+    main()

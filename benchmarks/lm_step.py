@@ -1,0 +1,48 @@
+"""Framework-level benchmark: train/decode step timings, reduced configs.
+
+Not a paper table — this exercises the LM substrate end to end on CPU
+(dense + MoE + SSM + hybrid) so regressions in the framework itself are
+visible in CI.  Derived: tokens/s on this host.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.training.serve_step import decode_step
+from repro.training.train_step import TrainConfig, make_train_state, train_step
+
+ARCHS = ["granite-3-8b", "deepseek-moe-16b", "rwkv6-3b", "hymba-1.5b"]
+B, S = 4, 64
+
+
+def run() -> None:
+    key = jax.random.PRNGKey(0)
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+        params = T.init_params(cfg, key)
+        tcfg = TrainConfig(microbatches=2, remat=True)
+        state = make_train_state(params, tcfg)
+        batch = {
+            "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+            "mask": jnp.ones((B, S), jnp.float32),
+        }
+        step = jax.jit(lambda st, b: train_step(st, b, cfg=cfg, tcfg=tcfg))
+        t = time_call(step, state, batch, iters=5)
+        emit(f"lm.train.{arch}", t, f"{B*S/t:.0f}tok/s")
+
+        caches = T.init_caches(cfg, B, 64)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+        pos = jnp.zeros((B, 1), jnp.int32)
+        dec = jax.jit(lambda p, t_, po, c: decode_step(p, cfg, t_, po, c))
+        t = time_call(dec, params, tok, pos, caches, iters=5)
+        emit(f"lm.decode.{arch}", t, f"{B/t:.0f}tok/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Figs. 6-7 / Eq. 3 — miniBUDE fasten GFLOP/s.
+
+The paper sweeps PPWI x workgroup size; the TPU analogues are poses-per-
+grid-step (lane tile) and the deck size.  bm1-proportioned deck, CPU-scaled.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, time_call
+from repro.core.metrics import minibude_ops
+from repro.kernels.minibude import ops
+
+DECK = dict(natpro=256, natlig=16, nposes=4096)
+TILE_SWEEP = [128, 256]   # PPWI analogue
+
+
+def run() -> None:
+    deck = ops.make_deck(**DECK, seed=0)
+    for tile in TILE_SWEEP:
+        total_ops = minibude_ops(tile, DECK["natlig"], DECK["natpro"],
+                                 DECK["nposes"])
+        t = time_call(ops.fasten_xla, *deck)
+        emit(f"minibude.xla.ppwi{tile}", t,
+             f"{total_ops / t / 1e9:.2f}GFLOP/s")
+        t = time_call(ops.fasten_pallas, *deck, pose_tile=tile,
+                      interpret=True, iters=3, warmup=1)
+        emit(f"minibude.pallas_interp.ppwi{tile}", t,
+             f"{total_ops / t / 1e9:.2f}GFLOP/s")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Paper Table 5 / Eq. 4 — the performance-portability metric Phi-bar.
+
+The paper computes e_i = portable_perf / vendor_perf per platform and
+averages.  Here the portable implementation is the Pallas kernel and the
+"vendor" baseline is what XLA autotunes from idiomatic jnp; platforms on
+this host are {cpu-xla, cpu-interpret} (on a TPU deployment the same harness
+compares pallas-TPU vs XLA-TPU — the metric machinery is identical).
+Derived column: per-case e_i, then one Phi row per proxy app.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.kernels  # noqa: F401  (registers all kernel backends)
+from benchmarks.common import emit, time_call
+from repro.core.metrics import Efficiency, phi_bar
+from repro.core.portable import registry
+from repro.kernels.hartree_fock import ops as hf_ops
+from repro.kernels.hartree_fock import ref as hf_ref
+from repro.kernels.minibude import ops as mb_ops
+from repro.kernels.stencil7 import ops as st_ops
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    phi_terms = {}
+
+    # stencil
+    u = jnp.asarray(rng.standard_normal((64, 64, 128)), jnp.float32)
+    t_ref = time_call(st_ops.laplacian_xla, u)
+    t_port = time_call(st_ops.laplacian_pallas, u, by=32, interpret=True,
+                       iters=3, warmup=1)
+    e = Efficiency("cpu", "stencil7.fp32", 1.0 / t_port, 1.0 / t_ref)
+    phi_terms["stencil7"] = [e]
+    emit("phi.e.stencil7.fp32", t_port, f"e={e.e:.3f}")
+
+    # babelstream
+    n = 1 << 20
+    a = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    b = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    args = {"copy": (a,), "mul": (a,), "add": (a, b), "triad": (a, b),
+            "dot": (a, b)}
+    terms = []
+    for op in ("copy", "mul", "add", "triad", "dot"):
+        k = registry.get(f"babelstream.{op}")
+        t_ref = k.time_backend(*args[op], backend="xla")
+        t_port = k.time_backend(*args[op], backend="pallas_interpret",
+                                iters=3, warmup=1)
+        e = Efficiency("cpu", f"babelstream.{op}", 1.0 / t_port, 1.0 / t_ref)
+        terms.append(e)
+        emit(f"phi.e.babelstream.{op}", t_port, f"e={e.e:.3f}")
+    phi_terms["babelstream"] = terms
+
+    # minibude
+    deck = mb_ops.make_deck(natpro=128, natlig=8, nposes=1024, seed=0)
+    t_ref = time_call(mb_ops.fasten_xla, *deck)
+    t_port = time_call(mb_ops.fasten_pallas, *deck, interpret=True, iters=3,
+                       warmup=1)
+    e = Efficiency("cpu", "minibude", 1.0 / t_port, 1.0 / t_ref)
+    phi_terms["minibude"] = [e]
+    emit("phi.e.minibude", t_port, f"e={e.e:.3f}")
+
+    # hartree-fock
+    pos = hf_ref.helium_lattice(8)
+    dens = hf_ref.initial_density(8)
+    t_ref = time_call(hf_ops.fock_xla, pos, dens, iters=5)
+    t_port = time_call(hf_ops.fock_pallas, pos, dens, interpret=True,
+                       iters=2, warmup=1)
+    e = Efficiency("cpu", "hartree_fock", 1.0 / t_port, 1.0 / t_ref)
+    phi_terms["hartree_fock"] = [e]
+    emit("phi.e.hartree_fock", t_port, f"e={e.e:.3f}")
+
+    for app, terms in phi_terms.items():
+        emit(f"phi.{app}", 0.0, f"phi={phi_bar(terms):.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline from dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report [--artifacts DIR]
+
+Reads benchmarks/artifacts/dryrun*/<mesh>/<arch>__<shape>.json and emits
+markdown tables to stdout (the EXPERIMENTS.md assembly script pipes these).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from collections import defaultdict
+
+HERE = os.path.dirname(__file__)
+DEFAULT = os.path.join(HERE, "artifacts/dryrun")
+
+ADVICE = {
+    "compute": "raise MXU occupancy: larger per-chip tiles / fewer, bigger "
+               "matmuls (already near the compute roof — good).",
+    "memory": "cut HBM round-trips: bf16 attention intermediates, fused "
+              "(flash) attention kernel, larger q-chunks, fewer f32 "
+              "norm/softmax materializations.",
+    "collective": "cut wire bytes: bf16 collectives, ZeRO-1 once-per-step "
+                  "weight gather, smaller MoE dispatch groups / capacity, "
+                  "overlap via microbatch pipelining.",
+}
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def load(art_dir):
+    cells = defaultdict(dict)
+    for path in glob.glob(os.path.join(art_dir, "*", "*.json")):
+        r = json.load(open(path))
+        cells[r["mesh"]][(r["arch"], r["shape"])] = r
+    return cells
+
+
+def dryrun_table(recs, mesh):
+    out = [f"\n### Mesh `{mesh}`\n",
+           "| arch | shape | status | peak GiB/chip | fits 16G | compile s |"
+           " collectives (count) |",
+           "|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] == "skipped":
+            out.append(f"| {arch} | {shape} | SKIP | — | — | — |"
+                       f" {r['reason'][:58]} |")
+            continue
+        colls = ", ".join(f"{k.split('-')[-1] if False else k}:"
+                          f"{v['count']}"
+                          for k, v in sorted(r["collectives"].items()))
+        out.append(
+            f"| {arch} | {shape} | OK | {fmt_bytes(r['per_chip']['peak_bytes'])}"
+            f" | {'yes' if r['fits_hbm'] else '**NO**'}"
+            f" | {r['compile_s']:.0f} | {colls} |")
+    return "\n".join(out)
+
+
+def roofline_table(recs):
+    out = ["",
+           "| arch | shape | compute s | memory s | collective s |"
+           " dominant | roofline frac | MODEL_FLOPS | useful ratio |"
+           " next lever |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape), r in sorted(recs.items()):
+        if r["status"] != "ok":
+            continue
+        rs = r["roofline_s"]
+        frac = rs["compute"] / max(r["bound_s"], 1e-12)
+        out.append(
+            f"| {arch} | {shape} | {rs['compute']:.3f} | {rs['memory']:.3f}"
+            f" | {rs['collective']:.3f} | {r['dominant']}"
+            f" | {frac:.1%} | {r['model_flops_total']:.2e}"
+            f" | {r['useful_flops_ratio']:.3f}"
+            f" | {ADVICE[r['dominant']][:72]} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=DEFAULT)
+    ap.add_argument("--section", default="both",
+                    choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    cells = load(args.artifacts)
+
+    if args.section in ("dryrun", "both"):
+        print("## §Dry-run — lower+compile of every (arch × shape × mesh)")
+        for mesh in sorted(cells):
+            print(dryrun_table(cells[mesh], mesh))
+    if args.section in ("roofline", "both"):
+        print("\n## §Roofline — single-pod (16×16) per-chip terms")
+        pod = cells.get("pod_16x16", {})
+        print(roofline_table(pod))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 2 + Tables 2-3 analogue — static kernel profiles.
+
+The paper uses ncu; our dry-run substitute derives, per science kernel:
+arithmetic intensity (FLOP/byte), claimed VMEM working set per BlockSpec,
+and the roofline placement against the TPU-v5e peaks.  Derived column:
+AI + bound classification.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.hlo_cost import analyze_hlo
+from repro.core.roofline import TPU_V5E
+from repro.kernels.hartree_fock import ops as hf_ops
+from repro.kernels.hartree_fock import ref as hf_ref
+from repro.kernels.minibude import ops as mb_ops
+from repro.kernels.stencil7 import kernel as st_kernel
+from repro.kernels.stencil7 import ops as st_ops
+from repro.kernels.babelstream import ops as bs_ops
+
+
+def _profile(name, fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    cost = analyze_hlo(compiled.as_text())
+    ai = cost.flops / max(cost.hbm_bytes, 1.0)
+    ridge = TPU_V5E.peak_flops / TPU_V5E.hbm_bw     # ~240 FLOP/byte on v5e
+    bound = "compute-bound" if ai > ridge else "memory-bound"
+    emit(f"roofline.{name}", 0.0,
+         f"AI={ai:.3f}FLOP/B {bound}")
+    return ai
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+
+    u = jax.ShapeDtypeStruct((128, 128, 128), jnp.float32)
+    _profile("stencil7.L128", st_ops.laplacian_xla, u)
+    emit("roofline.stencil7.vmem_set", 0.0,
+         f"{st_kernel.vmem_working_set_bytes((128,128,128), 4, 64)}B")
+
+    n = 1 << 22
+    a = jax.ShapeDtypeStruct((n,), jnp.float32)
+    _profile("babelstream.triad", lambda b, c: bs_ops.ref.triad(b, c), a, a)
+    _profile("babelstream.dot", lambda x, y: bs_ops.ref.dot(x, y), a, a)
+
+    deck = mb_ops.make_deck(natpro=256, natlig=16, nposes=2048, seed=0)
+    deck_sds = tuple(jax.ShapeDtypeStruct(d.shape, d.dtype) for d in deck)
+    _profile("minibude.fasten", mb_ops.fasten_xla, *deck_sds)
+
+    pos = jax.ShapeDtypeStruct((16, 3), jnp.float32)
+    dens = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    _profile("hartree_fock.a16", hf_ops.fock_xla, pos, dens)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+
+Emits ``name,us_per_call,derived`` CSV (scaffold contract).  Mapping:
+    stencil          -> paper Fig. 3 (Eq. 1 bandwidth)
+    babelstream      -> paper Fig. 4 (Eq. 2 bandwidth)
+    minibude         -> paper Figs. 6-7 (Eq. 3 GFLOP/s)
+    hartree_fock     -> paper Table 4 (wall-clock)
+    portability      -> paper Table 5 (Eq. 4 Phi-bar)
+    roofline_kernels -> paper Fig. 2 + Tables 2-3 (AI / bound placement)
+    lm_step          -> framework-level LM step timings
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import header
+
+MODULES = ["stencil", "babelstream", "minibude", "hartree_fock",
+           "portability", "roofline_kernels", "lm_step"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=MODULES)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+
+    header()
+    failed = []
+    for name in mods:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            mod.run()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"benchmark modules failed: {failed}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

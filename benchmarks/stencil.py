@@ -1,0 +1,44 @@
+"""Paper Fig. 3 / Eq. 1 — seven-point stencil effective bandwidth.
+
+Sweeps problem size L, precision, and y-block size (the TPU analogue of the
+paper's grid-dim sweep), for the XLA oracle and the Pallas kernel
+(interpret mode on CPU).  Derived column: effective GB/s per Eq. 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.metrics import stencil7_effective_bytes
+from repro.kernels.stencil7 import ops
+
+# CPU-scaled sizes (the paper uses 512/1024 on 94-128 GB GPUs)
+SIZES = [(64, 64, 128), (128, 128, 128)]
+BLOCK_SWEEP = [16, 32, 64]
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    for dtype, tag in ((jnp.float32, "fp32"),):
+        for shape in SIZES:
+            L = shape[0]
+            u = jnp.asarray(rng.standard_normal(shape), dtype)
+            eff_bytes = stencil7_effective_bytes(L, u.dtype.itemsize)
+
+            t = time_call(ops.laplacian_xla, u)
+            emit(f"stencil7.xla.L{L}.{tag}", t,
+                 f"{eff_bytes / t / 1e9:.2f}GB/s")
+
+            for by in BLOCK_SWEEP:
+                if shape[1] % by:
+                    continue
+                t = time_call(ops.laplacian_pallas, u, by=by,
+                              interpret=True, iters=3, warmup=1)
+                emit(f"stencil7.pallas_interp.L{L}.{tag}.by{by}", t,
+                     f"{eff_bytes / t / 1e9:.2f}GB/s")
+
+
+if __name__ == "__main__":
+    run()

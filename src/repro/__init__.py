@@ -1,0 +1,7 @@
+"""repro: performance-portable kernels + multi-pod LM framework (JAX/Pallas).
+
+Reproduction of "Mojo: MLIR-Based Performance-Portable HPC Science Kernels
+on GPUs for the Python Ecosystem" (SC-W'25), adapted to TPU.  See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,133 @@
+"""Sharded checkpointing: npz-per-host + JSON manifest, async, elastic.
+
+Arrays are saved in *logical* (unsharded) form, so a checkpoint written on a
+256-chip mesh restores onto any other topology (elastic resume) — the caller
+re-device_puts with the new mesh's shardings.  Writes are atomic
+(tmp + rename) and a retention policy prunes old steps.  SIGTERM-safe when
+used through distributed.fault_tolerance.TrainSupervisor.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths_leaves:
+        key = "/".join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs template {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3, host_id: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.host_id = host_id
+        os.makedirs(directory, exist_ok=True)
+        self._async_thread: Optional[threading.Thread] = None
+
+    # ---- paths ---------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    steps.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return max(steps) if steps else None
+
+    # ---- save ----------------------------------------------------------
+    def save(self, step: int, state: Any, metadata: Optional[Dict] = None,
+             blocking: bool = True) -> None:
+        # snapshot to host memory synchronously (cheap), write async if asked
+        flat = _flatten(state)
+        if blocking:
+            self._write(step, flat, metadata or {})
+        else:
+            self.wait()  # one in flight at a time
+            self._async_thread = threading.Thread(
+                target=self._write, args=(step, flat, metadata or {}),
+                daemon=True)
+            self._async_thread.start()
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               metadata: Dict) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, f"host_{self.host_id}.npz"), **flat)
+        manifest = {"step": step, "time": time.time(),
+                    "n_leaves": len(flat), **metadata}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+
+    def wait(self) -> None:
+        if self._async_thread is not None:
+            self._async_thread.join()
+            self._async_thread = None
+
+    def _prune(self) -> None:
+        steps = sorted(s for s in (self.latest_step(),) if s is not None)
+        all_steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in all_steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ---- restore -------------------------------------------------------
+    def restore(self, template: Any, step: Optional[int] = None,
+                ) -> Tuple[Any, Dict]:
+        """Restore into the structure/dtypes of `template` (any topology)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self._step_dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(d, f"host_{self.host_id}.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        return _unflatten(template, flat), manifest

@@ -1,0 +1,32 @@
+"""Core: the paper's portable-kernel contribution + metrics + roofline."""
+
+from repro.core.portable import (  # noqa: F401
+    Backend,
+    KernelRegistry,
+    PortableKernel,
+    get_kernel,
+    register_kernel,
+    registry,
+)
+from repro.core.metrics import (  # noqa: F401
+    Efficiency,
+    babelstream_bandwidth,
+    babelstream_bytes,
+    hartree_fock_quartets,
+    minibude_gflops,
+    minibude_ops,
+    phi_bar,
+    stencil7_effective_bandwidth,
+    stencil7_effective_bytes,
+)
+from repro.core.roofline import (  # noqa: F401
+    TPU_V5E,
+    ChipSpec,
+    RooflineTerms,
+    model_flops,
+    roofline_from_compiled,
+)
+from repro.core.hlo_analysis import (  # noqa: F401
+    CollectiveStats,
+    parse_collective_bytes,
+)

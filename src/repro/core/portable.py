@@ -1,0 +1,184 @@
+"""PortableKernel — the paper's contribution as a composable JAX abstraction.
+
+The Mojo paper's thesis: write a kernel ONCE against a portable, compile-time
+specialized abstraction, lower it to multiple targets, and measure efficiency
+against each target's "vendor" baseline.  Here:
+
+  * a *kernel spec* is a named operation with a figure-of-merit model
+    (FLOPs / moved bytes as a function of the input shapes — paper Eqs. 1-3);
+  * *backends* are alternative implementations of the same spec:
+      - ``xla``              pure-jnp oracle, what XLA autotunes (the "vendor"
+                             baseline analogue of CUDA/HIP),
+      - ``pallas``           the Pallas-TPU kernel (MLIR compile-time
+                             specialized, the "Mojo" analogue),
+      - ``pallas_interpret`` the same Pallas kernel body interpreted on CPU
+                             (correctness validation path used by CI);
+  * the registry can *validate* any backend against the oracle and *time* all
+    backends to feed the performance-portability metric (paper Eq. 4).
+
+Framework layers (attention, RWKV, MoE dispatch, science kernels) register
+here so deployments choose backends by name and CI sweeps them uniformly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "Backend",
+    "PortableKernel",
+    "KernelRegistry",
+    "registry",
+    "register_kernel",
+    "get_kernel",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One implementation of a kernel spec."""
+
+    name: str
+    fn: Callable[..., Any]
+    # True when this backend is expected to run on the *current* process
+    # (pallas-TPU kernels only run on TPU; interpret/xla run anywhere).
+    available: Callable[[], bool] = lambda: True
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        return self.fn(*args, **kwargs)
+
+
+@dataclasses.dataclass
+class PortableKernel:
+    """A named kernel spec with multiple backends and a figure-of-merit model.
+
+    ``flops_model`` / ``bytes_model`` take the same (abstract) arguments as
+    the kernel and return the paper-defined operation/byte counts used for
+    the GFLOP/s and effective-bandwidth figures of merit.
+    """
+
+    name: str
+    backends: Dict[str, Backend] = dataclasses.field(default_factory=dict)
+    oracle: str = "xla"
+    flops_model: Optional[Callable[..., float]] = None
+    bytes_model: Optional[Callable[..., float]] = None
+    doc: str = ""
+
+    # ---- registration -------------------------------------------------
+    def add_backend(self, name: str, fn: Callable[..., Any],
+                    available: Callable[[], bool] = lambda: True) -> None:
+        self.backends[name] = Backend(name=name, fn=fn, available=available)
+
+    def backend(self, name: Optional[str] = None) -> Backend:
+        if name is None:
+            name = self.default_backend()
+        if name not in self.backends:
+            raise KeyError(
+                f"kernel {self.name!r} has no backend {name!r}; "
+                f"have {sorted(self.backends)}")
+        return self.backends[name]
+
+    def default_backend(self) -> str:
+        """Pallas on TPU, oracle elsewhere — the paper's portability story."""
+        if "pallas" in self.backends and _on_tpu():
+            return "pallas"
+        return self.oracle
+
+    def __call__(self, *args: Any, backend: Optional[str] = None,
+                 **kwargs: Any) -> Any:
+        return self.backend(backend)(*args, **kwargs)
+
+    # ---- validation ----------------------------------------------------
+    def validate(self, *args: Any, backend: str, rtol: float = 1e-5,
+                 atol: float = 1e-5, **kwargs: Any) -> None:
+        """assert_allclose the given backend against the oracle."""
+        want = self.backend(self.oracle)(*args, **kwargs)
+        got = self.backend(backend)(*args, **kwargs)
+        jax.tree.map(
+            lambda w, g: np.testing.assert_allclose(
+                np.asarray(g, dtype=np.float64),
+                np.asarray(w, dtype=np.float64), rtol=rtol, atol=atol),
+            want, got)
+
+    # ---- measurement ---------------------------------------------------
+    def time_backend(self, *args: Any, backend: str, iters: int = 10,
+                     warmup: int = 2, **kwargs: Any) -> float:
+        """Median wall-clock seconds per call (post-warmup, paper §3).
+
+        The paper discards the first (JIT) step and reports medians over many
+        runs; we do the same.
+        """
+        fn = self.backend(backend)
+        for _ in range(warmup):
+            out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            jax.block_until_ready(out)
+            times.append(time.perf_counter() - t0)
+        return float(np.median(times))
+
+    def figure_of_merit(self, elapsed_s: float, *args: Any,
+                        **kwargs: Any) -> Dict[str, float]:
+        """GFLOP/s and GB/s from the paper's operation/byte models."""
+        out: Dict[str, float] = {"seconds": elapsed_s}
+        if self.flops_model is not None:
+            out["gflops_per_s"] = self.flops_model(*args, **kwargs) / elapsed_s / 1e9
+        if self.bytes_model is not None:
+            out["gbytes_per_s"] = self.bytes_model(*args, **kwargs) / elapsed_s / 1e9
+        return out
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # pragma: no cover - no backend at all
+        return False
+
+
+class KernelRegistry:
+    """Global name → PortableKernel map (the framework's kernel catalogue)."""
+
+    def __init__(self) -> None:
+        self._kernels: Dict[str, PortableKernel] = {}
+
+    def register(self, kernel: PortableKernel) -> PortableKernel:
+        if kernel.name in self._kernels:
+            raise ValueError(f"duplicate kernel {kernel.name!r}")
+        self._kernels[kernel.name] = kernel
+        return kernel
+
+    def get(self, name: str) -> PortableKernel:
+        return self._kernels[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._kernels
+
+    def names(self) -> Sequence[str]:
+        return sorted(self._kernels)
+
+
+registry = KernelRegistry()
+
+
+def register_kernel(name: str, *, oracle: str = "xla",
+                    flops_model: Optional[Callable[..., float]] = None,
+                    bytes_model: Optional[Callable[..., float]] = None,
+                    doc: str = "") -> PortableKernel:
+    """Create-or-get a PortableKernel in the global registry."""
+    if name in registry:
+        return registry.get(name)
+    return registry.register(PortableKernel(
+        name=name, oracle=oracle, flops_model=flops_model,
+        bytes_model=bytes_model, doc=doc))
+
+
+def get_kernel(name: str) -> PortableKernel:
+    return registry.get(name)

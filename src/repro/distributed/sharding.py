@@ -1,0 +1,254 @@
+"""Divisibility-aware sharding policy: DP / FSDP(ZeRO) / TP / EP / SP.
+
+Ten architectures with heterogeneous head counts (6, 24, 25, 32, 40, 64 …)
+and vocab sizes (49155, 32001, …) make hand-written PartitionSpecs fragile.
+This policy assigns mesh axes per tensor by rule, and provably never requests
+an indivisible sharding (tests/test_sharding.py property-tests the
+invariant):
+
+  * parameters: largest dim divisible by `model` -> TP; largest remaining
+    dim divisible by `data` -> FSDP/ZeRO.  Stacked-layer leading dims and
+    expert dims get dedicated handling (scan unit / EP).
+  * the `pod` axis is pure DP: batch + gradient all-reduce; parameters are
+    replicated across pods (cross-pod links are slowest; see
+    optim/compression.py for the gradient-bytes mitigation).
+  * activations: batch over (pod, data); if batch is unshardable (long-
+    context batch=1 cells) the *sequence* dim shards over (pod, data) — SP.
+  * KV caches: batch -> DP when divisible, else sequence -> SP; kv-heads ->
+    TP when divisible, else head_dim -> TP (head_dim is always a power of 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import ShardingHints
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        return ("pod", "data") if "pod" in self.mesh.axis_names \
+            else ("data",)
+
+    @property
+    def dp_size(self) -> int:
+        out = 1
+        for a in self.dp_axes:
+            out *= _axis_size(self.mesh, a)
+        return out
+
+    @property
+    def tp_size(self) -> int:
+        return _axis_size(self.mesh, "model")
+
+    # ------------------------------------------------------------------
+    # parameters
+    # ------------------------------------------------------------------
+    def param_spec(self, path: str, shape: Sequence[int]) -> P:
+        """Generic rule engine; `path` is the '/'-joined tree path."""
+        rank = len(shape)
+        spec: list = [None] * rank
+        if rank == 0:
+            return P()
+        start = 0
+        stacked = ("segments/" in path or path.startswith("segments")
+                   or "encoder/layers" in path)
+        if stacked:
+            start = 1  # leading n_layers dim is the scan unit — never shard
+
+        dims = list(range(start, rank))
+        # embedding table: shard ONLY the (padded) vocab dim.  Sharding the
+        # d_model dim of a gather table trips XLA SPMD's gather-grad
+        # partitioning ("slice dim size > dynamic slice dimension"); vocab
+        # padding (configs/base.py) guarantees divisibility here.
+        if path == "embed" or path.endswith("/embed"):
+            spec = [None] * rank
+            if shape[0] % self.tp_size == 0:
+                spec[0] = "model"
+            return P(*spec)
+
+        # EP override: expert banks (L?, E, d_in, d_out) — expert dim -> model
+        if "experts/" in path or "shared/" in path:
+            e_dim = start
+            if e_dim < rank and shape[e_dim] % self.tp_size == 0 \
+                    and shape[e_dim] >= self.tp_size:
+                spec[e_dim] = "model"
+                dims.remove(e_dim)
+            # FSDP on the largest remaining divisible dim
+            self._assign(spec, shape, dims, "data",
+                         _axis_size(self.mesh, "data"))
+            return P(*spec)
+
+        if rank - start == 1:
+            return P(*spec)  # 1-D (norm scales, biases): replicate
+
+        self._assign(spec, shape, dims, "model", self.tp_size)
+        self._assign(spec, shape, dims, "data",
+                     _axis_size(self.mesh, "data"))
+        return P(*spec)
+
+    @staticmethod
+    def _assign(spec, shape, dims, axis_name, axis_size):
+        if axis_size <= 1:
+            return
+        for d in sorted(dims, key=lambda i: -shape[i]):
+            if shape[d] % axis_size == 0 and shape[d] >= axis_size:
+                spec[d] = axis_name
+                dims.remove(d)
+                return
+
+    def tree_shardings(self, tree) -> Any:
+        """Pytree of NamedSharding matching `tree` (of arrays/SDS)."""
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        out = []
+        for path, leaf in paths_leaves:
+            pstr = "/".join(_key_str(k) for k in path)
+            out.append(NamedSharding(self.mesh,
+                                     self.param_spec(pstr, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    # batches / activations
+    # ------------------------------------------------------------------
+    def batch_spec(self, shape: Sequence[int]) -> P:
+        """Input batches (tokens/targets/mask (B,S), frames/patches (B,T,D))."""
+        rank = len(shape)
+        b = shape[0]
+        spec: list = [None] * rank
+        if b % self.dp_size == 0:
+            spec[0] = self.dp_axes
+        elif rank >= 2 and shape[1] % self.dp_size == 0:
+            spec[1] = self.dp_axes          # SP fallback (batch=1 cells)
+        return P(*spec)
+
+    def batch_shardings(self, batch) -> Any:
+        return jax.tree.map(
+            lambda a: NamedSharding(self.mesh, self.batch_spec(a.shape)),
+            batch)
+
+    # ------------------------------------------------------------------
+    # KV caches / decode state
+    # ------------------------------------------------------------------
+    def cache_spec(self, path: str, shape: Sequence[int]) -> P:
+        rank = len(shape)
+        spec: list = [None] * rank
+        start = 0
+        if "segments/" in path or path.startswith("segments"):
+            start = 1                        # stacked layer dim
+        dims = list(range(start, rank))
+        if not dims:
+            return P(*spec)
+        # batch is the first dim after stacking
+        b_dim = start
+        if shape[b_dim] % self.dp_size == 0 and shape[b_dim] >= self.dp_size:
+            spec[b_dim] = self.dp_axes
+            dims.remove(b_dim)
+        elif rank > b_dim + 1 and shape[b_dim + 1] % self.dp_size == 0 \
+                and shape[b_dim + 1] >= self.dp_size:
+            spec[b_dim + 1] = self.dp_axes   # SP over cache length
+            dims.remove(b_dim + 1)
+        # TP: try kv-heads (dim -2) then head_dim (dim -1)
+        for d in (rank - 2, rank - 1):
+            if d in dims and shape[d] % self.tp_size == 0 \
+                    and shape[d] >= self.tp_size:
+                spec[d] = "model"
+                dims.remove(d)
+                break
+        return P(*spec)
+
+    def cache_shardings(self, caches) -> Any:
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        out = []
+        for path, leaf in paths_leaves:
+            pstr = "/".join(_key_str(k) for k in path)
+            out.append(NamedSharding(self.mesh,
+                                     self.cache_spec(pstr, leaf.shape)))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # ------------------------------------------------------------------
+    # activation hints
+    # ------------------------------------------------------------------
+    def hints(self) -> ShardingHints:
+        mesh, dp_axes, dp, tp = self.mesh, self.dp_axes, self.dp_size, \
+            self.tp_size
+        policy = self
+
+        def moe_constraint(x, kind):
+            spec: list = [None] * x.ndim
+            if x.shape[0] % dp == 0 and x.shape[0] >= dp:
+                spec[0] = dp_axes                 # token groups -> DP
+            if kind == "gecd" and x.shape[1] % tp == 0 \
+                    and x.shape[1] >= tp:
+                spec[1] = "model"                 # expert dim -> EP
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+
+        def params_compute(tree):
+            paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(
+                tree)
+            out = []
+            for path, leaf in paths_leaves:
+                pstr = "/".join(_key_str(k) for k in path)
+                spec = policy.param_spec(pstr, leaf.shape)
+                stripped = P(*[ax if ax == "model" else None
+                               for ax in spec])
+                out.append(jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(mesh, stripped)))
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        def act(x):
+            if x.ndim < 2:
+                return x
+            spec: list = [None] * x.ndim
+            if x.shape[0] % dp == 0 and x.shape[0] >= dp:
+                spec[0] = dp_axes
+            elif x.shape[1] % dp == 0:
+                spec[1] = dp_axes            # SP
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+
+        def logits(x):
+            spec: list = [None] * x.ndim
+            if x.shape[0] % dp == 0 and x.shape[0] >= dp:
+                spec[0] = dp_axes
+            elif x.ndim >= 2 and x.shape[1] % dp == 0:
+                spec[1] = dp_axes
+            if x.shape[-1] % tp == 0:
+                spec[-1] = "model"           # vocab-sharded logits
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(*spec)))
+
+        return ShardingHints(activation=act, logits=logits,
+                             params_compute=params_compute,
+                             moe_constraint=moe_constraint)
+
+    # ------------------------------------------------------------------
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    if hasattr(k, "name"):
+        return str(k.name)
+    return str(k)

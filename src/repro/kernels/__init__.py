@@ -1,0 +1,12 @@
+"""Pallas TPU kernels (kernel.py + ops.py + ref.py each).
+
+Importing this package registers every kernel's backends in
+`repro.core.portable.registry` (the paper's portable-kernel catalogue).
+"""
+
+import repro.kernels.babelstream.ops  # noqa: F401
+import repro.kernels.stencil7.ops  # noqa: F401
+import repro.kernels.minibude.ops  # noqa: F401
+import repro.kernels.hartree_fock.ops  # noqa: F401
+import repro.kernels.flash_attention.ops  # noqa: F401
+import repro.kernels.rwkv6.ops  # noqa: F401

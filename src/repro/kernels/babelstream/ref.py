@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the BabelStream ops (paper Listing 3 semantics).
+
+These are the "vendor baseline" analogues: what XLA produces from idiomatic
+jnp.  scalar = 0.4 matches the upstream BabelStream startScalar.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+START_SCALAR = 0.4
+
+
+def copy(a: jnp.ndarray) -> jnp.ndarray:
+    """c[i] = a[i]"""
+    return a + 0  # force a materialized copy rather than aliasing
+
+
+def mul(c: jnp.ndarray, scalar: float = START_SCALAR) -> jnp.ndarray:
+    """b[i] = scalar * c[i]"""
+    return jnp.asarray(scalar, c.dtype) * c
+
+
+def add(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """c[i] = a[i] + b[i]"""
+    return a + b
+
+
+def triad(b: jnp.ndarray, c: jnp.ndarray,
+          scalar: float = START_SCALAR) -> jnp.ndarray:
+    """a[i] = b[i] + scalar * c[i]"""
+    return b + jnp.asarray(scalar, b.dtype) * c
+
+
+def dot(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """sum_i a[i]*b[i] (fp32/fp64 accumulate as input dtype dictates)."""
+    acc = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.float16) else a.dtype
+    return jnp.sum(a.astype(acc) * b.astype(acc)).astype(a.dtype)

@@ -1,0 +1,115 @@
+"""Flash attention (causal/windowed GQA) as a Pallas-TPU kernel.
+
+Tiling: grid (B, H, n_q, n_k) — the k axis is innermost and sequential on
+TPU, so the online-softmax running state (m, l, acc) lives in VMEM scratch
+persisting across k steps; the output BlockSpec maps every k step of one
+(b, h, qi) cell to the same block and is written on the last step.  GQA is
+expressed in the k/v index maps (h -> h // group).  BlockSpec dims are
+(bq x dh) / (bk x dh) MXU-aligned tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+
+
+def _flash_body(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                bq: int, bk: int, n_k: int, causal: bool, window: int,
+                scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_lo = qi * bq
+    k_lo = ki * bk
+    # static-shape predicate: does this k block intersect the mask at all?
+    run = True
+    if causal:
+        run = k_lo <= q_lo + bq - 1
+    if window:
+        run = run & (k_lo + bk - 1 >= q_lo - (window - 1))
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # (bq, bk)
+
+        qp = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kp = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kp <= qp
+        if window:
+            mask &= (qp - kp) < window
+        logits = jnp.where(mask, logits, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(logits - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...]
+                       / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False):
+    """q (B,H,S,Dh), k/v (B,Kv,T,Dh) -> (B,H,S,Dh)."""
+    b, h, s, dh = q.shape
+    kv, t = k.shape[1], k.shape[2]
+    g = h // kv
+    bq = min(bq, s)
+    bk = min(bk, t)
+    if s % bq or t % bk:
+        raise ValueError(f"S={s}/T={t} must divide block sizes {bq}/{bk}")
+    n_q, n_k = s // bq, t // bk
+    scale = 1.0 / math.sqrt(dh)
+
+    body = functools.partial(_flash_body, bq=bq, bk=bk, n_k=n_k,
+                             causal=causal, window=window, scale=scale)
+    return pl.pallas_call(
+        body,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, dh),
+                         lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh),
+                               lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, dh), jnp.float32),   # running accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""jit'd wrappers + registry entries for flash attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.portable import register_kernel
+from repro.kernels.flash_attention import kernel as K
+from repro.kernels.flash_attention.ref import flash_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                             "interpret"))
+def flash_pallas(q, k, v, *, causal=True, window=0, bq=K.DEFAULT_BQ,
+                 bk=K.DEFAULT_BK, interpret=False):
+    return K.flash_attention(q, k, v, causal=causal, window=window, bq=bq,
+                             bk=bk, interpret=interpret)
+
+
+flash_xla = jax.jit(flash_ref, static_argnames=("causal", "window"))
+
+
+def _flops_model(q, k, v, causal=True, **kw):
+    b, h, s, dh = q.shape
+    t = k.shape[2]
+    pairs = s * t * (0.5 if causal and s == t else 1.0)
+    return 4.0 * b * h * pairs * dh      # QK^T + PV
+
+
+_k = register_kernel("attention.flash", flops_model=_flops_model,
+                     doc="flash attention (causal/windowed GQA), "
+                         "online-softmax Pallas kernel")
+_k.add_backend("xla", flash_xla)
+_k.add_backend("pallas", flash_pallas)
+_k.add_backend("pallas_interpret",
+               functools.partial(flash_pallas, interpret=True))

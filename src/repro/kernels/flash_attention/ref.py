@@ -1,0 +1,27 @@
+"""Oracle for the flash-attention kernel: exact masked GQA attention.
+
+Layout convention for the kernel path: q (B, H, S, Dh), k/v (B, Kv, T, Dh)
+with index-aligned positions (token i at position i) — the train/prefill
+case the kernel serves.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.attention import attend
+
+
+def flash_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q (B,H,S,Dh), k/v (B,Kv,T,Dh) -> (B,H,S,Dh)."""
+    b, h, s, dh = q.shape
+    kv = k.shape[1]
+    t = k.shape[2]
+    q_bshd = jnp.moveaxis(q, 1, 2)            # (B,S,H,Dh)
+    k_bshd = jnp.moveaxis(k, 1, 2)
+    v_bshd = jnp.moveaxis(v, 1, 2)
+    pos_q = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    pos_k = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    out = attend(q_bshd, k_bshd, v_bshd, pos_q, pos_k, n_kv_heads=kv,
+                 causal=causal, window=window)
+    return jnp.moveaxis(out, 2, 1)

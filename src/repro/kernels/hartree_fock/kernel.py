@@ -1,0 +1,119 @@
+"""Hartree-Fock `twoel` Pallas-TPU kernel (gather formulation).
+
+TPU adaptation (DESIGN.md §3): the GPU versions scatter six atomic updates
+per unique quartet; Pallas-TPU has no global atomics and the paper shows the
+atomics serialize both vendors.  We grid over (i-tile) rows of the Fock
+matrix; each grid step GATHERS its full
+    F[i,:] = sum_kl D[k,l] (2 (ij|kl) - (ik|jl))
+contribution with zero write contention:
+
+    sublanes  <- i-tile (8 rows of F)
+    lanes     <- j (all atoms)
+    sequential fori over (k*l) pairs x (g3,g4) x (g1,g2) primitives
+
+Both the J tile (ij|kl) and the K tile (ik|jl) for fixed (k,l,g...) are
+(bi, N) VPU expressions sharing the same loop nest.  erf/exp/rsqrt are the
+transcendental hot ops (the paper's "fast-math" sensitivity analogue).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.hartree_fock.ref import TWO_PI_POW_2_5, Basis, boys_f0
+
+I_TILE = 8  # Fock rows per grid step (sublane height)
+
+
+def _twoel_body(pos_i_ref, pos_ref, dens_ref, zc_ref, o_ref, *,
+                natoms: int, ngauss: int):
+    dt = o_ref.dtype
+    N, G = natoms, ngauss
+
+    xi = pos_i_ref[:, 0:1]  # (bi, 1) i-tile coordinates
+    yi = pos_i_ref[:, 1:2]
+    zi = pos_i_ref[:, 2:3]
+    xj = pos_ref[:, 0].reshape(1, N)  # (1, N) all-atom coordinates
+    yj = pos_ref[:, 1].reshape(1, N)
+    zj = pos_ref[:, 2].reshape(1, N)
+
+    def ssss_tile(ax, ay, az, za, bx, by, bz, zb,
+                  cx, cy, cz, zc, dx, dy, dz, zd):
+        """(bi,N)-broadcast ssss integral for one primitive quartet."""
+        p = za + zb
+        q = zc + zd
+        ab2 = (ax - bx) ** 2 + (ay - by) ** 2 + (az - bz) ** 2
+        cd2 = (cx - dx) ** 2 + (cy - dy) ** 2 + (cz - dz) ** 2
+        kab = jnp.exp(-(za * zb / p) * ab2)
+        kcd = jnp.exp(-(zc * zd / q) * cd2)
+        px_, py_, pz_ = ((za * ax + zb * bx) / p, (za * ay + zb * by) / p,
+                         (za * az + zb * bz) / p)
+        qx_, qy_, qz_ = ((zc * cx + zd * dx) / q, (zc * cy + zd * dy) / q,
+                         (zc * cz + zd * dz) / q)
+        pq2 = (px_ - qx_) ** 2 + (py_ - qy_) ** 2 + (pz_ - qz_) ** 2
+        t = (p * q / (p + q)) * pq2
+        pref = dt.type(TWO_PI_POW_2_5) / (p * q * jnp.sqrt(p + q))
+        return pref * kab * kcd * boys_f0(t)
+
+    def body(idx, f_tile):
+        # idx enumerates (k, l, g3, g4, g1, g2)
+        kl, g_all = idx // (G * G * G * G), idx % (G * G * G * G)
+        k, l = kl // N, kl % N
+        g34, g12 = g_all // (G * G), g_all % (G * G)
+        g3, g4 = g34 // G, g34 % G
+        g1, g2 = g12 // G, g12 % G
+
+        zrow = zc_ref[0]  # (G,) exponents
+        crow = zc_ref[1]  # (G,) coefficients
+        z1, z2, z3, z4 = zrow[g1], zrow[g2], zrow[g3], zrow[g4]
+        cc = crow[g1] * crow[g2] * crow[g3] * crow[g4]
+
+        pk = pos_ref[k]  # (4,) dynamic row loads
+        plr = pos_ref[l]
+        kx, ky, kz = pk[0], pk[1], pk[2]
+        lx, ly, lz = plr[0], plr[1], plr[2]
+        dkl = dens_ref[k, l]
+
+        # J: (i j | k l) -> bra pair (i-tile, all-j), ket (k, l) fixed
+        j_tile = ssss_tile(xi, yi, zi, z1, xj, yj, zj, z2,
+                           kx, ky, kz, z3, lx, ly, lz, z4)
+        # K: (i k | j l) -> bra pair (i-tile, k), ket (all-j, l)
+        k_tile = ssss_tile(xi, yi, zi, z1, kx, ky, kz, z2,
+                           xj, yj, zj, z3, lx, ly, lz, z4)
+        return f_tile + cc * dkl * (2.0 * j_tile - k_tile)
+
+    f0 = jnp.zeros(o_ref.shape, dt)
+    total = N * N * G * G * G * G
+    o_ref[...] = jax.lax.fori_loop(0, total, body, f0)
+
+
+def twoel_tiled(positions4: jnp.ndarray, density: jnp.ndarray,
+                basis: Basis, *, i_tile: int = I_TILE,
+                interpret: bool = False) -> jnp.ndarray:
+    """positions4 (N, 4) [xyz + pad], density (N, N) -> Fock (N, N)."""
+    N = positions4.shape[0]
+    if N % i_tile:
+        raise ValueError(f"natoms={N} must be a multiple of i_tile={i_tile}")
+    G = basis.ngauss
+    zc = jnp.stack([basis.exponents, basis.coefficients]).astype(
+        positions4.dtype)  # (2, G)
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_twoel_body, natoms=N, ngauss=G),
+        grid=(N // i_tile,),
+        in_specs=[
+            pl.BlockSpec((i_tile, 4), lambda i: (i, 0)),  # i-tile positions
+            whole((N, 4)),                                # all positions
+            whole((N, N)),                                # density
+            whole((2, G)),                                # basis
+        ],
+        out_specs=pl.BlockSpec((i_tile, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, N), positions4.dtype),
+        interpret=interpret,
+    )(positions4, positions4, density, zc)

@@ -1,0 +1,142 @@
+"""miniBUDE `fasten` Pallas-TPU kernel.
+
+TPU adaptation (DESIGN.md §3): the GPU kernel holds PPWI poses per work-item
+in registers and loops atoms from L1.  On TPU we lay **poses on the lane
+axis** (128 poses per grid step = the PPWI analogue), **protein atoms on the
+sublane axis**, and run the ligand-atom loop sequentially:
+
+    grid step  = one 128-pose tile
+    VMEM       = full protein (natpro, 4) pos + (natpro, 4) params,
+                 full ligand, the (6, 128) pose slice
+    inner loop = fori over ligand atoms; each iteration evaluates the
+                 (natpro, 128) interaction tile with pure VPU ops
+
+All branches of the BUDE energy model become vector predicates (jnp.where) —
+TPU has no divergence.  Atom type is carried as a float and compared
+numerically, mirroring the paper's Mojo plain-old-data workaround.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.minibude.ref import (
+    CNSTNT, FLOAT_MAX, FOUR, HALF, HARDNESS, HBTYPE_E, HBTYPE_F, NPNPDIST,
+    NPPDIST, ONE, QUARTER, TWO, ZERO,
+)
+
+POSE_TILE = 128  # poses per grid step (lane width)
+
+
+def _fasten_body(ppos_ref, ppar_ref, lpos_ref, lpar_ref, poses_ref, o_ref,
+                 *, natlig: int):
+    dt = o_ref.dtype
+    # pose transform for this 128-pose tile: twelve (1, T) rows
+    ang = poses_ref[...]                       # (6, T)
+    sx, cx = jnp.sin(ang[0:1]), jnp.cos(ang[0:1])
+    sy, cy = jnp.sin(ang[1:2]), jnp.cos(ang[1:2])
+    sz, cz = jnp.sin(ang[2:3]), jnp.cos(ang[2:3])
+    tx, ty, tz = ang[3:4], ang[4:5], ang[5:6]
+    m00, m01, m02 = cy * cz, sx * sy * cz - cx * sz, cx * sy * cz + sx * sz
+    m10, m11, m12 = cy * sz, sx * sy * sz + cx * cz, cx * sy * sz - sx * cz
+    m20, m21, m22 = -sy, sx * cy, cx * cy
+
+    p_x = ppos_ref[:, 0:1]                     # (natpro, 1)
+    p_y = ppos_ref[:, 1:2]
+    p_z = ppos_ref[:, 2:3]
+    p_hbtype = ppar_ref[:, 0:1]
+    p_radius = ppar_ref[:, 1:2]
+    p_hphb = ppar_ref[:, 2:3]
+    p_elsc = ppar_ref[:, 3:4]
+
+    phphb_ltz = p_hphb < ZERO
+    phphb_gtz = p_hphb > ZERO
+    phphb_nz = p_hphb != ZERO
+
+    def per_ligand(il, etot):
+        lrow_pos = lpos_ref[pl.ds(il, 1), :]   # (1, 4)
+        lrow_par = lpar_ref[pl.ds(il, 1), :]
+        lx, ly, lz = lrow_pos[0, 0], lrow_pos[0, 1], lrow_pos[0, 2]
+        l_hbtype, l_radius = lrow_par[0, 0], lrow_par[0, 1]
+        l_hphb, l_elsc = lrow_par[0, 2], lrow_par[0, 3]
+
+        # transformed ligand position for every pose: (1, T)
+        lpx = m00 * lx + m01 * ly + m02 * lz + tx
+        lpy = m10 * lx + m11 * ly + m12 * lz + ty
+        lpz = m20 * lx + m21 * ly + m22 * lz + tz
+
+        lhphb_ltz = l_hphb < ZERO
+        lhphb_gtz = l_hphb > ZERO
+
+        radij = p_radius + l_radius            # (natpro, 1)
+        r_radij = ONE / radij
+        both_f = (p_hbtype == HBTYPE_F) & (l_hbtype == HBTYPE_F)
+        elcdst = jnp.where(both_f, FOUR, TWO)
+        elcdst1 = jnp.where(both_f, QUARTER, HALF)
+        type_e = (p_hbtype == HBTYPE_E) | (l_hbtype == HBTYPE_E)
+
+        p_hphb_s = p_hphb * jnp.where(phphb_ltz & lhphb_gtz, -ONE, ONE)
+        l_hphb_s = l_hphb * jnp.where(phphb_gtz & lhphb_ltz, -ONE, ONE)
+        distdslv = jnp.where(phphb_ltz,
+                             jnp.where(lhphb_ltz, NPNPDIST, NPPDIST),
+                             jnp.where(lhphb_ltz, NPPDIST, -FLOAT_MAX))
+        r_distdslv = ONE / distdslv
+        chrg_init = l_elsc * p_elsc
+        dslv_init = p_hphb_s + l_hphb_s
+
+        # (natpro, T) interaction tile — pure VPU
+        dx = lpx - p_x
+        dy = lpy - p_y
+        dz = lpz - p_z
+        distij = jnp.sqrt(dx * dx + dy * dy + dz * dz)
+        distbb = distij - radij
+        zone1 = distbb < ZERO
+
+        e_steric = (ONE - distij * r_radij) * jnp.where(
+            zone1, TWO * HARDNESS, ZERO)
+        chrg_e = chrg_init * (jnp.where(zone1, ONE, ONE - distbb * elcdst1)
+                              * jnp.where(distbb < elcdst, ONE, ZERO))
+        chrg_e = jnp.where(type_e, -jnp.abs(chrg_e), chrg_e)
+        e_chrg = chrg_e * CNSTNT
+
+        coeff = ONE - distbb * r_distdslv
+        dslv_e = dslv_init * jnp.where((distbb < distdslv) & phphb_nz,
+                                       ONE, ZERO)
+        dslv_e = dslv_e * jnp.where(zone1, ONE, coeff)
+
+        return etot + jnp.sum(e_steric + e_chrg + dslv_e, axis=0,
+                              keepdims=True)
+
+    etot = jnp.zeros((1, ang.shape[1]), dt)
+    etot = jax.lax.fori_loop(0, natlig, per_ligand, etot)
+    o_ref[...] = etot * HALF
+
+
+def fasten_tiled(protein_pos, protein_par, ligand_pos, ligand_par, poses,
+                 *, pose_tile: int = POSE_TILE, interpret: bool = False):
+    """poses (6, P) -> energies (1, P); P must be a multiple of pose_tile."""
+    natpro = protein_pos.shape[0]
+    natlig = ligand_pos.shape[0]
+    P = poses.shape[1]
+    if P % pose_tile:
+        raise ValueError(f"nposes={P} not a multiple of {pose_tile}")
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_fasten_body, natlig=natlig),
+        grid=(P // pose_tile,),
+        in_specs=[
+            whole((natpro, 4)),
+            whole((natpro, 4)),
+            whole((natlig, 4)),
+            whole((natlig, 4)),
+            pl.BlockSpec((6, pose_tile), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, pose_tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, P), poses.dtype),
+        interpret=interpret,
+    )(protein_pos, protein_par, ligand_pos, ligand_par, poses)

@@ -1,0 +1,73 @@
+"""jit'd wrappers + registry entries + deck generator for miniBUDE."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.portable import register_kernel
+from repro.core.metrics import minibude_ops
+from repro.kernels.minibude import kernel as K
+from repro.kernels.minibude import ref
+
+
+@functools.partial(jax.jit, static_argnames=("pose_tile", "interpret"))
+def fasten_pallas(protein_pos, protein_par, ligand_pos, ligand_par, poses,
+                  *, pose_tile=K.POSE_TILE, interpret=False):
+    out = K.fasten_tiled(protein_pos, protein_par, ligand_pos, ligand_par,
+                         poses, pose_tile=pose_tile, interpret=interpret)
+    return out[0]
+
+
+fasten_xla = jax.jit(ref.fasten)
+
+
+def make_deck(natpro=938, natlig=26, nposes=65536, ntypes=4, seed=0,
+              dtype=jnp.float32):
+    """Synthetic bm1-shaped deck (positions in Å-scale box, BUDE-like params).
+
+    Forcefield rows are (hbtype, radius, hphb, elsc); hbtype drawn from
+    {F, E, 0}, hphb from {-1, 0, 1}-ish magnitudes, matching the branch
+    structure the real deck exercises.
+    """
+    rng = np.random.default_rng(seed)
+    hb_choices = np.array([ref.HBTYPE_F, ref.HBTYPE_E, 0.0], np.float32)
+
+    def params(n):
+        return np.stack([
+            rng.choice(hb_choices, n),
+            rng.uniform(1.0, 2.5, n),
+            rng.choice(np.array([-0.8, 0.0, 0.9], np.float32), n),
+            rng.uniform(-1.0, 1.0, n),
+        ], axis=1)
+
+    def positions(n, box):
+        xyz = rng.uniform(-box, box, (n, 3))
+        types = rng.integers(0, ntypes, (n, 1)).astype(np.float64)
+        return np.concatenate([xyz, types], axis=1)
+
+    poses = np.concatenate([
+        rng.uniform(0, 2 * np.pi, (3, nposes)),
+        rng.uniform(-2.0, 2.0, (3, nposes)),
+    ], axis=0)
+    to = lambda a: jnp.asarray(a, dtype)
+    return (to(positions(natpro, 24.0)), to(params(natpro)),
+            to(positions(natlig, 8.0)), to(params(natlig)), to(poses))
+
+
+def _flops_model(protein_pos, protein_par, ligand_pos, ligand_par, poses,
+                 ppwi: int = K.POSE_TILE, **kw):
+    # paper Eq. 3 with PPWI = poses-per-grid-step (lane tile)
+    return minibude_ops(ppwi, ligand_pos.shape[0], protein_pos.shape[0],
+                        poses.shape[1])
+
+
+_k = register_kernel("minibude.fasten", flops_model=_flops_model,
+                     doc="miniBUDE fasten energy kernel (paper Eq. 3 FoM)")
+_k.add_backend("xla", fasten_xla)
+_k.add_backend("pallas", fasten_pallas)
+_k.add_backend("pallas_interpret",
+               functools.partial(fasten_pallas, interpret=True))

@@ -1,0 +1,109 @@
+"""Pure-jnp oracle for the miniBUDE `fasten` kernel.
+
+Faithful port of the BUDE energy model (steric + formal/dipole charge +
+desolvation terms) from the open-source miniBUDE kernel the paper benchmarks.
+Data model mirrors the paper's Mojo workaround: atoms are flat float rows
+(x, y, z, type-as-float); per-atom forcefield params are pre-gathered rows
+(hbtype, radius, hphb, elsc).
+
+fasten(protein_pos, protein_par, ligand_pos, ligand_par, poses) -> (nposes,)
+poses is (6, nposes): three rotation angles + three translations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+ZERO, QUARTER, HALF, ONE, TWO, FOUR = 0.0, 0.25, 0.5, 1.0, 2.0, 4.0
+CNSTNT = 45.0
+HARDNESS = 38.0
+NPNPDIST = 5.5
+NPPDIST = 1.0
+HBTYPE_F = 70.0
+HBTYPE_E = 69.0
+FLOAT_MAX = 1e30
+
+
+def pose_transforms(poses: jnp.ndarray) -> jnp.ndarray:
+    """(6, P) pose parameters -> (P, 3, 4) rigid transforms (BUDE order)."""
+    sx, cx = jnp.sin(poses[0]), jnp.cos(poses[0])
+    sy, cy = jnp.sin(poses[1]), jnp.cos(poses[1])
+    sz, cz = jnp.sin(poses[2]), jnp.cos(poses[2])
+    tx, ty, tz = poses[3], poses[4], poses[5]
+    m = jnp.stack([
+        jnp.stack([cy * cz, sx * sy * cz - cx * sz, cx * sy * cz + sx * sz, tx], -1),
+        jnp.stack([cy * sz, sx * sy * sz + cx * cz, cx * sy * sz - sx * cz, ty], -1),
+        jnp.stack([-sy, sx * cy, cx * cy, tz], -1),
+    ], axis=-2)  # (P, 3, 4)
+    return m
+
+
+def fasten(protein_pos: jnp.ndarray, protein_par: jnp.ndarray,
+           ligand_pos: jnp.ndarray, ligand_par: jnp.ndarray,
+           poses: jnp.ndarray) -> jnp.ndarray:
+    P = poses.shape[1]
+    m = pose_transforms(poses)                       # (P, 3, 4)
+
+    p_hbtype = protein_par[:, 0][:, None]            # (natpro, 1)
+    p_radius = protein_par[:, 1][:, None]
+    p_hphb = protein_par[:, 2][:, None]
+    p_elsc = protein_par[:, 3][:, None]
+    p_xyz = protein_pos[:, :3]                       # (natpro, 3)
+
+    def per_ligand(etot, il):
+        lpos0 = ligand_pos[il, :3]
+        l_hbtype, l_radius, l_hphb, l_elsc = (ligand_par[il, 0],
+                                              ligand_par[il, 1],
+                                              ligand_par[il, 2],
+                                              ligand_par[il, 3])
+        # transform ligand atom for every pose: (P, 3)
+        lpos = jnp.einsum("pij,j->pi", m[:, :, :3], lpos0) + m[:, :, 3]
+
+        lhphb_ltz = l_hphb < ZERO
+        lhphb_gtz = l_hphb > ZERO
+
+        radij = p_radius + l_radius                  # (natpro, 1)
+        r_radij = ONE / radij
+        both_f = (p_hbtype == HBTYPE_F) & (l_hbtype == HBTYPE_F)
+        elcdst = jnp.where(both_f, FOUR, TWO)
+        elcdst1 = jnp.where(both_f, QUARTER, HALF)
+        type_e = (p_hbtype == HBTYPE_E) | (l_hbtype == HBTYPE_E)
+
+        phphb_ltz = p_hphb < ZERO
+        phphb_gtz = p_hphb > ZERO
+        phphb_nz = p_hphb != ZERO
+        p_hphb_s = p_hphb * jnp.where(phphb_ltz & lhphb_gtz, -ONE, ONE)
+        l_hphb_s = l_hphb * jnp.where(phphb_gtz & lhphb_ltz, -ONE, ONE)
+        distdslv = jnp.where(phphb_ltz,
+                             jnp.where(lhphb_ltz, NPNPDIST, NPPDIST),
+                             jnp.where(lhphb_ltz, NPPDIST, -FLOAT_MAX))
+        r_distdslv = ONE / distdslv
+        chrg_init = l_elsc * p_elsc
+        dslv_init = p_hphb_s + l_hphb_s
+
+        # distances: (natpro, P)
+        d = lpos.T[None, :, :] - p_xyz[:, :, None]   # (natpro, 3, P)
+        distij = jnp.sqrt(jnp.sum(d * d, axis=1))
+        distbb = distij - radij
+        zone1 = distbb < ZERO
+
+        e_steric = (ONE - distij * r_radij) * jnp.where(zone1,
+                                                        TWO * HARDNESS, ZERO)
+        chrg_e = chrg_init * (jnp.where(zone1, ONE, ONE - distbb * elcdst1)
+                              * jnp.where(distbb < elcdst, ONE, ZERO))
+        chrg_e = jnp.where(type_e, -jnp.abs(chrg_e), chrg_e)
+        e_chrg = chrg_e * CNSTNT
+
+        coeff = ONE - distbb * r_distdslv
+        dslv_e = dslv_init * jnp.where((distbb < distdslv) & phphb_nz,
+                                       ONE, ZERO)
+        dslv_e = dslv_e * jnp.where(zone1, ONE, coeff)
+
+        contrib = jnp.sum(e_steric + e_chrg + dslv_e, axis=0)   # (P,)
+        return etot + contrib, None
+
+    etot0 = jnp.zeros((P,), poses.dtype)
+    etot, _ = jax.lax.scan(per_ligand, etot0,
+                           jnp.arange(ligand_pos.shape[0]))
+    return etot * HALF

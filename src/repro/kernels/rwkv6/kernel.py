@@ -1,0 +1,103 @@
+"""RWKV6 chunked WKV as a Pallas-TPU kernel.
+
+Grid (B*H, n_chunks): the chunk axis is innermost and sequential on TPU, so
+the recurrent state S (Dh x Dv, fp32) lives in VMEM scratch and flows across
+chunk steps without touching HBM (the jnp formulation in models/rwkv.py
+must round-trip it through the scan carry).  Per chunk:
+
+    intra  A[t,s] = sum_d r[t,d] k[s,d] exp(lw_cum[t-1,d] - lw_cum[s,d])
+           (strict lower triangle; every exponent <= 0 — stable)
+    bonus  diag(r_t . (u ⊙ k_t))
+    inter  y += (r ⊙ exp(lw_before)) @ S
+    state  S  = diag(exp(cw)) S + (k ⊙ exp(cw - lw_cum))^T v
+
+u is indexed per head via the grid index map (bh -> bh % H).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _wkv_body(r_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_scr, *,
+              chunk: int, dh: int, dv: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)          # (C, Dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # (C, Dv)
+    lw = lw_ref[0].astype(jnp.float32)        # (C, Dh), log-decay <= 0
+    u = u_ref[0].astype(jnp.float32)          # (1? Dh,) -> (Dh,)
+
+    lw_cum = jnp.cumsum(lw, axis=0)           # (C, Dh)
+    lw_before = lw_cum - lw
+    cw = lw_cum[-1:]                          # (1, Dh)
+
+    # intra-chunk strict triangle (C, C) via (t, s, d) contraction.
+    # Clamp: masked s >= t entries have positive exponents (-> inf -> NaN).
+    expdiff = jnp.exp(jnp.minimum(
+        lw_before[:, None, :] - lw_cum[None, :, :], 0.0))
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+    a = jnp.einsum("td,sd,tsd->ts", r, k, expdiff) * tri
+    diag = jnp.sum(r * (u[None] * k), axis=1)           # (C,)
+    y = jax.lax.dot(a, v, preferred_element_type=jnp.float32) \
+        + diag[:, None] * v
+
+    # inter-chunk from the carried state
+    r_dec = r * jnp.exp(lw_before)
+    y = y + jax.lax.dot(r_dec, s_scr[...],
+                        preferred_element_type=jnp.float32)
+
+    # state update
+    k_dec = k * jnp.exp(cw - lw_cum)
+    s_scr[...] = jnp.exp(cw).T * s_scr[...] + jax.lax.dot(
+        k_dec.T, v, preferred_element_type=jnp.float32)
+
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def wkv_chunked_pallas(r, k, v, w_logdecay, u, *, chunk: int = DEFAULT_CHUNK,
+                       interpret: bool = False):
+    """r/k/v/w (B, H, S, Dh) fp32, u (H, Dh) -> y (B, H, S, Dv).
+
+    Note: unlike the jnp path this kernel starts from S = 0 (training /
+    prefill-from-scratch); decode uses the O(1) serial step instead.
+    """
+    b, h, s, dh = r.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        raise ValueError(f"S={s} must divide chunk={chunk}")
+    n = s // chunk
+
+    def flat(x):
+        return x.reshape(b * h, s, x.shape[-1])
+
+    rf, kf, vf, lwf = map(flat, (r, k, v, w_logdecay))
+
+    seq_spec = pl.BlockSpec((1, chunk, dh), lambda bh, ci: (bh, ci, 0))
+    out = pl.pallas_call(
+        functools.partial(_wkv_body, chunk=chunk, dh=dh, dv=dv),
+        grid=(b * h, n),
+        in_specs=[
+            seq_spec, seq_spec,
+            pl.BlockSpec((1, chunk, dv), lambda bh, ci: (bh, ci, 0)),
+            seq_spec,
+            pl.BlockSpec((1, dh), lambda bh, ci: (bh % h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda bh, ci: (bh, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, dv), r.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dv), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, lwf, u)
+    return out.reshape(b, h, s, dv)

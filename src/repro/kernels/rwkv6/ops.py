@@ -1,0 +1,41 @@
+"""jit'd wrappers + registry entries for the WKV6 chunked kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.portable import register_kernel
+from repro.kernels.rwkv6 import kernel as K
+from repro.kernels.rwkv6.ref import wkv_chunked, wkv_serial
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv_pallas(r, k, v, w_logdecay, u, *, chunk=K.DEFAULT_CHUNK,
+               interpret=False):
+    return K.wkv_chunked_pallas(r, k, v, w_logdecay, u, chunk=chunk,
+                                interpret=interpret)
+
+
+@jax.jit
+def wkv_xla(r, k, v, w_logdecay, u):
+    y, _ = wkv_serial(r, k, v, w_logdecay, u)
+    return y
+
+
+def _flops_model(r, k, v, w_logdecay, u, chunk=K.DEFAULT_CHUNK, **kw):
+    b, h, s, dh = r.shape
+    dv = v.shape[-1]
+    intra = s * chunk * (dh + dv)          # A build + A@v per token row
+    inter = (s // chunk) * 2 * dh * dv * chunk
+    return float(b * h * (intra + inter)) * 2.0
+
+
+_k = register_kernel("rwkv6.wkv", flops_model=_flops_model,
+                     doc="RWKV6 chunked WKV scan (data-dependent decay)")
+_k.add_backend("xla", wkv_xla)
+_k.add_backend("pallas", wkv_pallas)
+_k.add_backend("pallas_interpret",
+               functools.partial(wkv_pallas, interpret=True))

@@ -1,0 +1,8 @@
+"""Oracle for the WKV6 kernel: the exact serial recurrence."""
+
+from __future__ import annotations
+
+from repro.models.rwkv import wkv_chunked, wkv_serial  # noqa: F401
+
+# wkv_serial is the oracle; wkv_chunked is the jnp chunked formulation the
+# Pallas kernel mirrors (both validated against wkv_serial in tests).

@@ -1,0 +1,105 @@
+"""Seven-point stencil Pallas-TPU kernel.
+
+TPU adaptation (DESIGN.md §3): instead of the GPU one-thread-per-cell model
+with cache-served halos, we tile (z, y-block) slabs of the (z, y, x) volume
+into VMEM using FIVE BlockSpecs over the same input:
+
+    zc : (z,   y)   the resident plane-slab
+    zm : (z-1, y)   plane above      (index map clamped at z=0)
+    zp : (z+1, y)   plane below      (clamped at z=nz-1)
+    ym : (z, y-1)   previous y-slab  (only its LAST row is consumed)
+    yp : (z, y+1)   next y-slab      (only its FIRST row is consumed)
+
+x-neighbours are in-slab lane shifts (pad+slice on the 128-lane axis).
+Boundary cells are masked with a vector predicate rather than the CUDA-style
+`if (i>0 && ...) return` guard — TPU is vector-predicated, not
+thread-divergent.  All coefficients are compile-time constants (the Mojo
+`alias` analogue).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_BY = 64
+
+
+def _stencil_body(zc_ref, zm_ref, zp_ref, ym_ref, yp_ref, o_ref, *,
+                  nz: int, ny: int, nx: int, by: int,
+                  invhx2: float, invhy2: float, invhz2: float,
+                  invhxyz2: float):
+    z = pl.program_id(0)
+    yb = pl.program_id(1)
+    dt = o_ref.dtype
+
+    c = zc_ref[0]          # (by, nx) resident slab
+    up = zm_ref[0]
+    dn = zp_ref[0]
+
+    # y halo rows from the neighbouring slabs
+    ym_row = ym_ref[0, by - 1, :][None, :]
+    yp_row = yp_ref[0, 0, :][None, :]
+    y_prev = jnp.concatenate([ym_row, c[:-1]], axis=0)
+    y_next = jnp.concatenate([c[1:], yp_row], axis=0)
+
+    # x halo via lane shifts (edge columns masked out below)
+    x_prev = jnp.pad(c, ((0, 0), (1, 0)))[:, :-1]
+    x_next = jnp.pad(c, ((0, 0), (0, 1)))[:, 1:]
+
+    out = (c * dt.type(invhxyz2)
+           + (x_prev + x_next) * dt.type(invhx2)
+           + (y_prev + y_next) * dt.type(invhy2)
+           + (up + dn) * dt.type(invhz2))
+
+    # interior-cell predicate
+    gy = yb * by + jax.lax.broadcasted_iota(jnp.int32, (by, nx), 0)
+    gx = jax.lax.broadcasted_iota(jnp.int32, (by, nx), 1)
+    interior = ((gy > 0) & (gy < ny - 1) & (gx > 0) & (gx < nx - 1)
+                & (z > 0) & (z < nz - 1))
+    o_ref[0] = jnp.where(interior, out, jnp.zeros_like(out))
+
+
+def laplacian_3d(u: jnp.ndarray, invhx2: float, invhy2: float, invhz2: float,
+                 invhxyz2: float, *, by: int = DEFAULT_BY,
+                 interpret: bool = False) -> jnp.ndarray:
+    """Pallas seven-point stencil over a (nz, ny, nx) volume."""
+    nz, ny, nx = u.shape
+    if nx % LANES:
+        raise ValueError(f"nx={nx} must be a multiple of {LANES}")
+    if ny % by:
+        raise ValueError(f"ny={ny} must be a multiple of by={by}")
+
+    block = (1, by, nx)
+    zc = pl.BlockSpec(block, lambda z, y: (z, y, 0))
+    zm = pl.BlockSpec(block, lambda z, y: (jnp.maximum(z - 1, 0), y, 0))
+    zp = pl.BlockSpec(block, lambda z, y: (jnp.minimum(z + 1, nz - 1), y, 0))
+    ym = pl.BlockSpec(block, lambda z, y: (z, jnp.maximum(y - 1, 0), 0))
+    yp = pl.BlockSpec(block,
+                      lambda z, y: (z, jnp.minimum(y + 1, ny // by - 1), 0))
+
+    body = functools.partial(
+        _stencil_body, nz=nz, ny=ny, nx=nx, by=by,
+        invhx2=float(invhx2), invhy2=float(invhy2), invhz2=float(invhz2),
+        invhxyz2=float(invhxyz2))
+
+    return pl.pallas_call(
+        body,
+        grid=(nz, ny // by),
+        in_specs=[zc, zm, zp, ym, yp],
+        out_specs=pl.BlockSpec(block, lambda z, y: (z, y, 0)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=interpret,
+    )(u, u, u, u, u)
+
+
+def vmem_working_set_bytes(u_shape: Tuple[int, int, int], itemsize: int,
+                           by: int = DEFAULT_BY) -> int:
+    """Claimed VMEM footprint: 5 input slabs + 1 output slab (per buffer)."""
+    _, _, nx = u_shape
+    return 6 * by * nx * itemsize

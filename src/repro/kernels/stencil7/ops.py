@@ -1,0 +1,41 @@
+"""jit'd wrappers + registry entries for the seven-point stencil."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.portable import register_kernel
+from repro.core.metrics import stencil7_effective_bytes
+from repro.kernels.stencil7 import kernel as K
+from repro.kernels.stencil7 import ref
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "invhx2", "invhy2", "invhz2", "invhxyz2", "by", "interpret"))
+def laplacian_pallas(u, invhx2=1.0, invhy2=1.0, invhz2=1.0, invhxyz2=-6.0,
+                     *, by=K.DEFAULT_BY, interpret=False):
+    return K.laplacian_3d(u, invhx2, invhy2, invhz2, invhxyz2, by=by,
+                          interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "invhx2", "invhy2", "invhz2", "invhxyz2"))
+def laplacian_xla(u, invhx2=1.0, invhy2=1.0, invhz2=1.0, invhxyz2=-6.0):
+    return ref.laplacian(u, invhx2, invhy2, invhz2, invhxyz2)
+
+
+def _bytes_model(u, *args, **kw):
+    # paper Eq. 1, assuming the cubic L^3 grid of the study
+    L = u.shape[0]
+    return stencil7_effective_bytes(L, u.dtype.itemsize)
+
+
+_k = register_kernel("stencil7", bytes_model=_bytes_model,
+                     doc="seven-point Laplacian stencil (paper Eq. 1 FoM)")
+_k.add_backend("xla", laplacian_xla)
+_k.add_backend("pallas", laplacian_pallas)
+_k.add_backend("pallas_interpret",
+               functools.partial(laplacian_pallas, interpret=True))

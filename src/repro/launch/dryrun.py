@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * `.lower(**ShapeDtypeStructs).compile()` must succeed for the 16x16
+    single-pod mesh AND the 2x16x16 multi-pod mesh for every applicable cell;
+  * `compiled.memory_analysis()` proves the per-chip working set fits HBM;
+  * `compiled.cost_analysis()` + HLO collective parsing feed the roofline
+    table (EXPERIMENTS.md §Roofline).
+
+Artifacts land in benchmarks/artifacts/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, cell_applicable, get_config
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.roofline import TPU_V5E, model_flops, roofline_from_compiled
+from repro.distributed.sharding import ShardingPolicy
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import forward
+from repro.training.serve_step import decode_step
+from repro.training.train_step import TrainConfig, train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "../../../benchmarks/artifacts/dryrun")
+
+
+def tcfg_for(cfg: ModelConfig, shape: ShapeConfig, dp: int) -> TrainConfig:
+    """Microbatching heuristic: bound live activations to ~1 row/chip for the
+    widest models, 2 rows otherwise (see DESIGN.md §8)."""
+    b = shape.global_batch
+    # widest models, MoE (dispatch/combine tensors) and SSM-hybrid
+    # (associative-scan intermediates, (B,S,Di,N) fp32) get 1 row/chip
+    rows_per_chip = 1 if (cfg.d_model >= 8192 or cfg.is_moe
+                          or cfg.ssm_state > 0) else 2
+    micro = max(dp * rows_per_chip, 1)
+    microbatches = max(1, b // micro) if b % micro == 0 else 1
+    while b % microbatches:
+        microbatches //= 2
+    return TrainConfig(microbatches=max(microbatches, 1), remat=True)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, policy):
+    """Returns (fn, kwargs_specs, in_shardings, donate, n_step_tokens)."""
+    hints = policy.hints()
+    if shape.kind == "train":
+        tcfg = tcfg_for(cfg, shape, policy.dp_size)
+        state = S.train_state_specs(cfg, tcfg)
+        batch = S.train_batch_specs(cfg, shape)
+        fn = functools.partial(train_step, cfg=cfg, tcfg=tcfg, hints=hints)
+        in_sh = (policy.tree_shardings(state), policy.batch_shardings(batch))
+        out_sh = (policy.tree_shardings(state), None)
+        args = (state, batch)
+        return fn, args, in_sh, out_sh, (0,), shape.global_batch * shape.seq_len
+
+    if shape.kind == "prefill":
+        inp = S.prefill_input_specs(cfg, shape)
+        params = S.params_specs(cfg)
+
+        def fn(params_, tokens, frames=None, patches=None):
+            logits, _, _ = forward(params_, cfg, tokens, frames=frames,
+                                   patches=patches, hints=hints,
+                                   last_only=True)
+            return logits[:, -1]
+
+        in_sh = (policy.tree_shardings(params),
+                 *(policy.batch_shardings(inp[k]) for k in inp))
+        args = (params, *inp.values())
+        return fn, args, in_sh, None, (), shape.global_batch * shape.seq_len
+
+    # decode
+    inp = S.decode_input_specs(cfg, shape)
+    params = S.params_specs(cfg)
+
+    def fn(params_, tokens, positions, caches, memory=None):
+        return decode_step(params_, cfg, tokens, positions, caches,
+                           memory=memory, hints=hints)
+
+    cache_sh = policy.cache_shardings(inp["caches"])
+    in_sh = [policy.tree_shardings(params),
+             policy.batch_shardings(inp["tokens"]),
+             policy.batch_shardings(inp["positions"]),
+             cache_sh]
+    args = [params, inp["tokens"], inp["positions"], inp["caches"]]
+    if "memory" in inp:
+        in_sh.append(policy.batch_shardings(inp["memory"]))
+        args.append(inp["memory"])
+    out_sh = (None, cache_sh)
+    return fn, tuple(args), tuple(in_sh), out_sh, (3,), shape.global_batch
+
+
+VARIANTS = {
+    # cfg overrides; the special "_kernel_adjusted" key switches the
+    # roofline analysis to cost Pallas-kernel-resident tiles at zero HBM
+    "baseline": {},
+    "attn_bf16": {"attn_bf16_intermediates": True},
+    "zero1": {"zero1_weights": True},
+    "stopgrad": {"moe_stopgrad_dispatch": True},
+    "bf16_norm": {"norm_bf16_mul": True},
+    "flash": {"_kernel_adjusted": True},
+    "opt": {"attn_bf16_intermediates": True, "zero1_weights": True,
+            "moe_stopgrad_dispatch": True, "norm_bf16_mul": True,
+            "_kernel_adjusted": True},
+}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str, variant: str = "baseline") -> Dict[str, Any]:
+    cfg = get_config(arch)
+    overrides = dict(VARIANTS.get(variant, {}))
+    kernel_adjusted = overrides.pop("_kernel_adjusted", False)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh_tag = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    ok, reason = cell_applicable(cfg, shape)
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "variant": variant,
+        "kind": shape.kind, "status": "skipped", "reason": reason,
+    }
+    if not ok:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, f"{arch}__{shape_name}.json"),
+                  "w") as f:
+            json.dump(record, f, indent=2)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    policy = ShardingPolicy(mesh, cfg)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate, tokens = build_cell(cfg, shape, mesh,
+                                                         policy)
+    jit_kwargs: Dict[str, Any] = {"in_shardings": in_sh}
+    if out_sh is not None:
+        jit_kwargs["out_shardings"] = out_sh
+    if donate:
+        jit_kwargs["donate_argnums"] = donate
+    with mesh:
+        lowered = jax.jit(fn, **jit_kwargs).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    hlo = compiled.as_text()
+    terms = roofline_from_compiled(compiled, TPU_V5E, hlo_text=hlo,
+                                   kernel_adjusted=kernel_adjusted)
+    mem = compiled.memory_analysis()
+
+    kind = "train" if shape.kind == "train" else "serve"
+    mflops = model_flops(cfg.active_params(), tokens,
+                         "train" if kind == "train" else "serve")
+    # cost_analysis is per-partition under SPMD: scale up for the ratio
+    useful_ratio = mflops / (terms.flops * n_chips) if terms.flops else 0.0
+
+    record.update({
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "per_chip": {
+            "flops": terms.flops,
+            "hbm_bytes": terms.hbm_bytes,
+            "collective_bytes": terms.collective_bytes,
+            "argument_bytes": terms.argument_bytes,
+            "output_bytes": terms.output_bytes,
+            "temp_bytes": terms.temp_bytes,
+            "peak_bytes": terms.peak_bytes,
+            "xla_flops_flat": terms.xla_flops,
+            "xla_bytes_flat": terms.xla_bytes,
+            "unknown_trip_loops": terms.unknown_trip_loops,
+        },
+        "roofline_s": {
+            "compute": terms.compute_s,
+            "memory": terms.memory_s,
+            "collective": terms.collective_s,
+        },
+        "dominant": terms.dominant,
+        "bound_s": terms.bound_s,
+        "collectives": terms.collectives,
+        "model_flops_total": mflops,
+        "useful_flops_ratio": useful_ratio,
+        "tokens_per_step": tokens,
+        "fits_hbm": terms.peak_bytes <= TPU_V5E.hbm_bytes,
+    })
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="baseline",
+                    choices=sorted(VARIANTS))
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    args = ap.parse_args()
+    if args.variant != "baseline":
+        args.out = args.out.rstrip("/") + f"_{args.variant}"
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for multi in meshes:
+        tag = "multipod_2x16x16" if multi else "pod_16x16"
+        out_dir = os.path.join(args.out, tag)
+        for arch in archs:
+            for shape in shapes:
+                try:
+                    rec = run_cell(arch, shape, multi, out_dir,
+                                   args.variant)
+                except Exception as e:  # a failing cell is a bug: surface it
+                    traceback.print_exc()
+                    failures.append((tag, arch, shape, repr(e)))
+                    print(f"FAIL  {tag:18s} {arch:24s} {shape:12s} {e!r}",
+                          flush=True)
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"SKIP  {tag:18s} {arch:24s} {shape:12s} "
+                          f"{rec['reason'][:60]}", flush=True)
+                else:
+                    pb = rec["per_chip"]["peak_bytes"] / 2 ** 30
+                    print(f"OK    {tag:18s} {arch:24s} {shape:12s} "
+                          f"dom={rec['dominant']:10s} "
+                          f"bound={rec['bound_s']*1e3:8.2f}ms "
+                          f"peak={pb:6.2f}GiB "
+                          f"compile={rec['compile_s']:6.1f}s", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        for f in failures:
+            print("  ", *f)
+        raise SystemExit(1)
+    print("\nall requested dry-run cells passed")
+
+
+if __name__ == "__main__":
+    main()

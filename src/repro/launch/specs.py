@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell.
+
+Everything here is allocation-free: full-size models exist only as abstract
+shapes (the smoke tests instantiate reduced configs instead).  Modality
+frontends are stubs per the assignment: `frames` / `patches` are precomputed
+embeddings.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import init_caches, init_params
+from repro.training.train_step import TrainConfig, make_train_state
+
+
+def sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def modality_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if cfg.is_encoder_decoder:
+        out["frames"] = sds((batch, cfg.encoder_frames, cfg.d_model),
+                            cfg.compute_dtype)
+    if cfg.frontend == "vision_stub":
+        out["patches"] = sds((batch, cfg.n_patches, cfg.d_model),
+                             cfg.compute_dtype)
+    return out
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": sds((b, s), jnp.int32),
+             "targets": sds((b, s), jnp.int32),
+             "mask": sds((b, s), jnp.float32)}
+    batch.update(modality_specs(cfg, b))
+    return batch
+
+
+def train_state_specs(cfg: ModelConfig, tcfg: TrainConfig):
+    def build():
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        return make_train_state(params, tcfg)
+    return jax.eval_shape(build)
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(
+        functools.partial(init_caches, cfg, batch, cache_len))
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    b, s = shape.global_batch, shape.seq_len
+    return {"tokens": sds((b, s), jnp.int32), **modality_specs(cfg, b)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """One-new-token serve step with a KV cache of seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": sds((b, 1), jnp.int32),
+             "positions": sds((b, 1), jnp.int32),
+             "caches": cache_specs(cfg, b, s)}
+    if cfg.is_encoder_decoder:
+        specs["memory"] = sds((b, cfg.encoder_frames, cfg.d_model),
+                              cfg.compute_dtype)
+    return specs

@@ -1,0 +1,157 @@
+"""GQA attention: full / sliding-window / cross, prefill + ring-buffer decode.
+
+Masks are position-based: the KV cache carries the absolute position of every
+slot (-1 = empty), so full caches and sliding-window ring buffers share one
+code path.  Softmax accumulates in fp32.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype, n_layers_scale: int = 1) -> Params:
+    ks = jax.random.split(key, 4)
+    out_scale = 1.0 / math.sqrt(2 * n_layers_scale)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv_heads * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv_heads * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype,
+                         out_scale),
+    }
+
+
+def init_cache(batch: int, cache_len: int, n_kv_heads: int, head_dim: int,
+               dtype) -> Dict[str, jnp.ndarray]:
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv_heads, head_dim), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def _gqa_scores(q, k, n_kv_heads):
+    """q (B,S,H,Dh), k (B,T,Kv,Dh) -> (B,Kv,G,S,T) fp32 logits."""
+    b, s, h, dh = q.shape
+    g = h // n_kv_heads
+    qg = q.reshape(b, s, n_kv_heads, g, dh)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    return logits * (1.0 / math.sqrt(dh))
+
+
+def _gqa_combine(weights, v):
+    """weights (B,Kv,G,S,T), v (B,T,Kv,Dh) -> (B,S,H,Dh)."""
+    b, kv, g, s, t = weights.shape
+    # keep v in its storage dtype; accumulate in f32 (avoids materializing
+    # an f32 copy of the full KV cache on the decode path)
+    out = jnp.einsum("bkgst,btkd->bskgd", weights.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, s, kv * g, v.shape[-1])
+
+
+def _masked_softmax(logits, mask):
+    logits = jnp.where(mask, logits, NEG_INF)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - jax.lax.stop_gradient(m))
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+CHUNKED_THRESHOLD = 2048  # use flash-style path when S_q * T is large
+
+
+def attend(q, k, v, q_pos, k_pos, *, n_kv_heads: int, causal: bool,
+           window: int = 0, bf16_intermediates: bool = False) -> jnp.ndarray:
+    """Position-masked GQA attention.
+
+    q_pos (B,S) / k_pos (B,T) absolute positions; k_pos == -1 marks empty
+    cache slots.  window > 0 additionally restricts to q_pos - k_pos < window.
+    Long sequences dispatch to the flash-style chunked path automatically.
+    """
+    s, t = q.shape[1], k.shape[1]
+    if s >= CHUNKED_THRESHOLD and t >= CHUNKED_THRESHOLD \
+            and s % 512 == 0 and t % 1024 == 0:
+        from repro.models.chunked_attention import attend_chunked
+        return attend_chunked(q, k, v, q_pos, k_pos, n_kv_heads=n_kv_heads,
+                              causal=causal, window=window,
+                              bf16_intermediates=bf16_intermediates)
+    logits = _gqa_scores(q, k, n_kv_heads)              # (B,Kv,G,S,T)
+    qp = q_pos[:, None, None, :, None]
+    kp = k_pos[:, None, None, None, :]
+    mask = kp >= 0
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= (qp - kp) < window
+    weights = _masked_softmax(logits, mask)
+    return _gqa_combine(weights, v).astype(q.dtype)
+
+
+def attention_apply(p: Params, x: jnp.ndarray, *, n_heads: int,
+                    n_kv_heads: int, head_dim: int, positions: jnp.ndarray,
+                    causal: bool = True, window: int = 0,
+                    use_rope: bool = True, rope_theta: float = 1e4,
+                    cache: Optional[Dict[str, jnp.ndarray]] = None,
+                    memory_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                    memory_pos: Optional[jnp.ndarray] = None,
+                    bf16_intermediates: bool = False,
+                    ) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """One attention sublayer.
+
+    * training / prefill: cache=None, full-sequence self attention.
+    * decode: cache holds K/V/pos ring buffer; x is (B, 1, D).
+    * cross attention: memory_kv=(k, v) precomputed from encoder output
+      (memory_pos gives their positions; causal must be False).
+    Returns (output, updated_cache).
+    """
+    b, s, d = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+
+    if memory_kv is not None:
+        k, v = memory_kv
+        k_pos = memory_pos
+        new_cache = cache
+    else:
+        k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+        v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+        if use_rope:
+            k = apply_rope(k, positions, rope_theta)
+        if cache is None:
+            k_pos = positions
+            new_cache = None
+        else:
+            cache_len = cache["k"].shape[1]
+            # ring-buffer slot for each new token
+            slots = positions % cache_len                # (B, S)
+            bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+            ck = cache["k"].at[bidx, slots].set(k)
+            cv = cache["v"].at[bidx, slots].set(v)
+            cpos = cache["pos"].at[bidx, slots].set(positions)
+            new_cache = {"k": ck, "v": cv, "pos": cpos}
+            k, v, k_pos = ck, cv, cpos
+
+    out = attend(q, k, v, positions, k_pos, n_kv_heads=n_kv_heads,
+                 causal=causal, window=window,
+                 bf16_intermediates=bf16_intermediates)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"], new_cache
+
+
+def cross_kv(p: Params, memory: jnp.ndarray, n_kv_heads: int,
+             head_dim: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute cross-attention K/V from encoder memory (B, T, D)."""
+    b, t, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(b, t, n_kv_heads, head_dim)
+    v = (memory @ p["wv"]).reshape(b, t, n_kv_heads, head_dim)
+    return k, v

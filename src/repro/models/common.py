@@ -1,0 +1,129 @@
+"""Shared building blocks: norms, RoPE, MLPs, initializers.
+
+Pure-functional style: params are pytrees of jnp arrays; every module is an
+(init, apply) pair.  Norm/softmax accumulate in fp32 regardless of the
+compute dtype (bf16), per standard large-model numerics.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / math.sqrt(d_in)
+    return jax.random.normal(key, (d_in, d_out), dtype) * jnp.asarray(
+        std, dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return jax.random.normal(key, (vocab, d), dtype) * jnp.asarray(0.02, dtype)
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def norm_init(d: int, kind: str, dtype) -> Params:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: Params, x: jnp.ndarray, kind: str, eps: float = 1e-6,
+               bf16_mul: bool = False) -> jnp.ndarray:
+    """Norm with fp32 reductions.
+
+    bf16_mul (beyond-paper lever): keep the elementwise path in the compute
+    dtype — only the (tiny) reduction statistics are fp32.  Besides halving
+    the norm's own traffic, the nonlinear fp32 square stops XLA SPMD from
+    sinking upstream TP all-reduces past the fp32 upcast (measured 2x
+    all-reduce bytes in the baseline; EXPERIMENTS.md §Perf).
+    """
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        rms = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        if bf16_mul:
+            out = x * rms.astype(x.dtype) * p["scale"].astype(x.dtype)
+            return out
+        out = xf * rms * p["scale"].astype(jnp.float32)
+    elif kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        if bf16_mul:
+            inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+            out = (x - mu.astype(x.dtype)) * inv \
+                * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+            return out
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) \
+            * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown norm {kind!r}")
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# RoPE (GPT-NeoX half-rotation convention)
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (Dh/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,Dh/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+def mlp_init(key, d: int, d_ff: int, kind: str, dtype,
+             n_layers_scale: int = 1) -> Params:
+    ks = jax.random.split(key, 3)
+    out_scale = 1.0 / math.sqrt(2 * n_layers_scale)
+    if kind == "swiglu":
+        return {"w_gate": dense_init(ks[0], d, d_ff, dtype),
+                "w_up": dense_init(ks[1], d, d_ff, dtype),
+                "w_down": dense_init(ks[2], d_ff, d, dtype, out_scale)}
+    if kind == "gelu":
+        return {"w_up": dense_init(ks[0], d, d_ff, dtype),
+                "w_down": dense_init(ks[1], d_ff, d, dtype, out_scale)}
+    raise ValueError(f"unknown mlp {kind!r}")
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = jax.nn.gelu(x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# misc
+# --------------------------------------------------------------------------
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating)
+        else a, tree)
+
+
+def count_params(tree) -> int:
+    return sum(int(a.size) for a in jax.tree.leaves(tree))

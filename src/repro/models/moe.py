@@ -1,0 +1,147 @@
+"""Mixture-of-Experts layer: fine-grained routed experts + shared experts.
+
+GShard-style capacity-based dense dispatch (DESIGN.md §3 / §8): routing is
+expressed as one-hot dispatch/combine einsums — the TPU-native, atomics-free
+replacement for gather/scatter token shuffling.  Under the sharding policy
+the expert dim lives on the `model` mesh axis, so GSPMD lowers the dispatch
+einsums to all-to-alls (expert parallelism).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+
+
+def moe_init(key, d: int, d_ff: int, n_experts: int, n_shared: int,
+             mlp_kind: str, dtype, n_layers_scale: int = 1) -> Params:
+    ks = jax.random.split(key, 8)
+    out_scale = 1.0 / math.sqrt(2 * n_layers_scale)
+    n_mats = 3 if mlp_kind == "swiglu" else 2
+
+    def expert_bank(key, n):
+        kk = jax.random.split(key, n_mats)
+        bank = {
+            "w_up": jax.random.normal(kk[0], (n, d, d_ff), dtype)
+            / jnp.asarray(math.sqrt(d), dtype),
+            "w_down": jax.random.normal(kk[1], (n, d_ff, d), dtype)
+            * jnp.asarray(out_scale / math.sqrt(d_ff), dtype),
+        }
+        if mlp_kind == "swiglu":
+            bank["w_gate"] = jax.random.normal(kk[2], (n, d, d_ff), dtype) \
+                / jnp.asarray(math.sqrt(d), dtype)
+        return bank
+
+    p = {"router": dense_init(ks[0], d, n_experts, dtype),
+         "experts": expert_bank(ks[1], n_experts)}
+    if n_shared:
+        p["shared"] = expert_bank(ks[2], n_shared)
+    return p
+
+
+def _bank_ffn(bank: Params, x_e: jnp.ndarray, mlp_kind: str) -> jnp.ndarray:
+    """x_e (..., E, C, D) -> same, through per-expert FFNs."""
+    up = jnp.einsum("...ecd,edf->...ecf", x_e, bank["w_up"])
+    if mlp_kind == "swiglu":
+        gate = jnp.einsum("...ecd,edf->...ecf", x_e, bank["w_gate"])
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return jnp.einsum("...ecf,efd->...ecd", h, bank["w_down"])
+
+
+GROUP_SIZE = 1024  # tokens per routing group (GShard-style locality)
+
+
+def moe_apply(p: Params, x: jnp.ndarray, *, n_experts: int, top_k: int,
+              mlp_kind: str, capacity_factor: float = 1.25,
+              group_size: int = GROUP_SIZE,
+              stopgrad_dispatch: bool = False,
+              constraint=lambda x, kind: x,
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (B, S, D) -> (out (B,S,D), aux load-balance loss (scalar)).
+
+    Tokens are routed within fixed-size *groups* (GShard): capacity and the
+    dispatch/combine one-hot contractions are per-group, so dispatch memory
+    is O(T * E * C_g) with C_g = ceil(group * k / E * cf) — linear in tokens,
+    not quadratic.  Overflow tokens beyond capacity drop that expert's
+    contribution (standard).
+    """
+    b, s, d = x.shape
+    t = b * s
+    gs = min(group_size, t)
+    # dispatch/combine one-hots cost ~ T * gs * k * cf bytes: at inference-
+    # prefill token counts (>128k) shrink the group so the routing tensors
+    # stay within HBM (quality-neutral: capacity scales with the group).
+    if t > 131072:
+        gs = min(gs, 64)
+    if t % gs:
+        gs = math.gcd(t, gs)
+    g = t // gs
+    xt = x.reshape(g, gs, d)
+
+    logits = jnp.einsum("gtd,de->gte", xt, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)    # (G, gs, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    capacity = int(math.ceil(gs * top_k / n_experts * capacity_factor))
+    capacity = max(capacity, top_k)
+
+    # one-hot expert masks per routing slot, priority = slot-major order
+    mask = jax.nn.one_hot(gate_idx, n_experts, dtype=jnp.int32)  # (G,gs,k,E)
+    mask_flat = mask.transpose(0, 2, 1, 3).reshape(g, top_k * gs, n_experts)
+    pos = jnp.cumsum(mask_flat, axis=1) - 1
+    pos = pos.reshape(g, top_k, gs, n_experts).transpose(0, 2, 1, 3)
+    pos_in_expert = jnp.sum(pos * mask, axis=-1)                 # (G,gs,k)
+    keep = pos_in_expert < capacity
+
+    kept_mask = (mask * keep[..., None]).astype(x.dtype)         # (G,gs,k,E)
+    poh = jax.nn.one_hot(jnp.where(keep, pos_in_expert, capacity),
+                         capacity, dtype=x.dtype)                # (G,gs,k,C)
+    if stopgrad_dispatch:
+        # exact beyond-paper lever: the one-hots are piecewise-constant, so
+        # their cotangents are mathematically irrelevant — router gradients
+        # flow through gate_vals in `combine` only.  Skipping their AD
+        # removes the fp32 (G,gs,E,C) backward tensors + all-reduces.
+        kept_mask = jax.lax.stop_gradient(kept_mask)
+        poh = jax.lax.stop_gradient(poh)
+    # contract k without materializing (G,gs,k,E,C)
+    dispatch = constraint(
+        jnp.einsum("gtke,gtkc->gtec", kept_mask, poh), "gtec")
+    combine = constraint(
+        jnp.einsum("gtke,gtkc->gtec",
+                   kept_mask * gate_vals.astype(x.dtype)[..., None], poh),
+        "gtec")
+
+    x_e = constraint(
+        jnp.einsum("gtec,gtd->gecd", dispatch, xt), "gecd")      # (G,E,C,D)
+    y_e = constraint(_bank_ffn(p["experts"], x_e, mlp_kind), "gecd")
+    out = jnp.einsum("gtec,gecd->gtd", combine, y_e)
+
+    if "shared" in p:
+        # shared experts act on every token: computed as direct einsums over
+        # the (small) expert dim — no broadcast_to, which GSPMD propagates
+        # badly (it replicated the (E_s, F, T) hidden across the mesh)
+        sb = p["shared"]
+        up = jnp.einsum("gtd,edf->gtef", xt, sb["w_up"])
+        if mlp_kind == "swiglu":
+            gate = jnp.einsum("gtd,edf->gtef", xt, sb["w_gate"])
+            h_sh = jax.nn.silu(gate) * up
+        else:
+            h_sh = jax.nn.gelu(up)
+        h_sh = constraint(h_sh, "gtec")
+        out = out + jnp.einsum("gtef,efd->gtd", h_sh, sb["w_down"])
+
+    # load-balance aux loss (Switch form): E * sum_e f_e * p_e
+    importance = jnp.mean(probs.reshape(t, n_experts), axis=0)   # (E,)
+    load = jnp.mean(
+        jnp.max(mask, axis=2).reshape(t, n_experts).astype(jnp.float32),
+        axis=0)
+    aux = jnp.asarray(n_experts, jnp.float32) * jnp.sum(importance * load)
+    return out.reshape(b, s, d), aux

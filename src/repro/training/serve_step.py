@@ -1,0 +1,72 @@
+"""Serving: prefill + KV-cache decode steps (batched requests)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (NO_HINTS, ShardingHints, encode,
+                                      forward, init_caches)
+
+
+def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            cache_len: int, frames=None, patches=None,
+            hints: ShardingHints = NO_HINTS):
+    """Process the prompt, fill caches. Returns (last_logits, caches, memory)."""
+    b, s = tokens.shape
+    caches = init_caches(cfg, b, cache_len)
+    memory = None
+    if cfg.is_encoder_decoder:
+        memory, _ = encode(params, cfg, frames, hints)
+    logits, caches, _ = forward(params, cfg, tokens, caches=caches,
+                                patches=patches, memory=memory, hints=hints,
+                                last_only=True)
+    return logits[:, -1], caches, memory
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                positions: jnp.ndarray, caches, *, memory=None,
+                hints: ShardingHints = NO_HINTS):
+    """One token for every sequence. tokens/positions (B, 1)."""
+    logits, caches, _ = forward(params, cfg, tokens, positions=positions,
+                                caches=caches, memory=memory, hints=hints)
+    return logits[:, -1], caches
+
+
+def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
+           top_k: int = 0) -> jnp.ndarray:
+    """logits (B, V) -> token ids (B,)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(lf, top_k)
+        lf = jnp.where(lf < vals[..., -1:], -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, *,
+             max_new_tokens: int, cache_len: int, key=None,
+             temperature: float = 0.0, frames=None, patches=None,
+             hints: ShardingHints = NO_HINTS) -> jnp.ndarray:
+    """Greedy/temperature generation loop (host-driven, jit per step)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    b, s = prompt.shape
+    last, caches, memory = prefill(params, cfg, prompt, cache_len=cache_len,
+                                   frames=frames, patches=patches,
+                                   hints=hints)
+    out = []
+    tok = sample(last, key, temperature)
+    out.append(tok)
+    for i in range(1, max_new_tokens):
+        key, sub = jax.random.split(key)
+        pos = jnp.full((b, 1), s + i - 1, jnp.int32)
+        logits, caches = decode_step(params, cfg, tok[:, None], pos, caches,
+                                     memory=memory, hints=hints)
+        tok = sample(logits, sub, temperature)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,115 @@
+"""Training step: remat + microbatch gradient accumulation + AdamW.
+
+The microbatch loop is a lax.scan, which (a) bounds live activation memory to
+one microbatch, and (b) lets XLA overlap each microbatch's gradient
+reduce-scatter with the next microbatch's compute (latency hiding at the
+pod scale).  Optional error-feedback int8 compression decimates cross-pod
+gradient bytes (optim/compression.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import NO_HINTS, ShardingHints, forward
+from repro.optim import adamw, compression
+from repro.training.losses import softmax_xent
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    remat: bool = True
+    moe_aux_weight: float = 0.01
+    z_loss: float = 1e-4
+    compress_pod_grads: bool = False
+    opt: adamw.AdamWConfig = dataclasses.field(
+        default_factory=adamw.AdamWConfig)
+
+
+def make_train_state(params, tcfg: TrainConfig) -> Dict[str, Any]:
+    state = {"params": params, "opt": adamw.init_state(params)}
+    if tcfg.compress_pod_grads:
+        state["residual"] = compression.init_residual(params)
+    return state
+
+
+def loss_fn(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            tcfg: TrainConfig, hints: ShardingHints = NO_HINTS):
+    logits, _, aux = forward(
+        params, cfg, batch["tokens"],
+        frames=batch.get("frames"), patches=batch.get("patches"),
+        hints=hints, remat=tcfg.remat)
+    loss, metrics = softmax_xent(logits, batch["targets"],
+                                 batch.get("mask"), z_loss=tcfg.z_loss)
+    total = loss + tcfg.moe_aux_weight * aux
+    metrics = dict(metrics, loss=loss, moe_aux=aux)
+    return total, metrics
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], k: int):
+    def split(a):
+        b = a.shape[0]
+        if b % k:
+            raise ValueError(f"batch {b} not divisible into {k} microbatches")
+        return a.reshape(k, b // k, *a.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def train_step(state: Dict[str, Any], batch: Dict[str, jnp.ndarray], *,
+               cfg: ModelConfig, tcfg: TrainConfig,
+               hints: ShardingHints = NO_HINTS,
+               ) -> Tuple[Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One optimizer step over `batch` (global batch on axis 0)."""
+    params = state["params"]
+    if cfg.zero1_weights:
+        # beyond-paper lever (DESIGN.md §8 / EXPERIMENTS §Perf): one bf16
+        # cast + FSDP gather per STEP, hoisted out of the microbatch loop;
+        # gradients flow through the cast back to the fp32 masters.
+        from repro.models.common import cast_tree
+        compute_params = hints.params_compute(
+            cast_tree(params, cfg.cdtype()))
+    else:
+        compute_params = params
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if tcfg.microbatches > 1:
+        mbs = _split_microbatches(batch, tcfg.microbatches)
+
+        def mb_body(carry, mb):
+            g_acc, l_acc, m_acc = carry
+            (_, metrics), grads = grad_fn(compute_params, cfg, mb, tcfg,
+                                          hints)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+            return (g_acc, l_acc + metrics["loss"],
+                    jax.tree.map(jnp.add, m_acc, metrics)), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        m0 = {"nll": 0., "accuracy": 0., "z_loss": 0., "loss": 0.,
+              "moe_aux": 0.}
+        m0 = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), m0)
+        (grads, _, metrics), _ = jax.lax.scan(
+            mb_body, (g0, jnp.asarray(0.0, jnp.float32), m0), mbs)
+        inv = 1.0 / tcfg.microbatches
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m * inv, metrics)
+    else:
+        (_, metrics), grads = grad_fn(compute_params, cfg, batch, tcfg,
+                                      hints)
+
+    if tcfg.compress_pod_grads:
+        grads, new_residual = compression.ef_compress_tree(
+            grads, state["residual"])
+
+    new_params, new_opt, opt_metrics = adamw.apply_updates(
+        params, grads, state["opt"], tcfg.opt)
+    new_state = {"params": new_params, "opt": new_opt}
+    if tcfg.compress_pod_grads:
+        new_state["residual"] = new_residual
+    return new_state, dict(metrics, **opt_metrics)

@@ -1,0 +1,10 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see 1 device
+(only launch/dryrun.py forces the 512-device placeholder topology)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

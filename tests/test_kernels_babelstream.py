@@ -1,0 +1,67 @@
+"""BabelStream Pallas kernels vs pure-jnp oracle (interpret mode), with
+shape/dtype sweeps and the paper's Eq. 2 byte model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import babelstream_bytes
+from repro.core.portable import registry
+from repro.kernels.babelstream import ops, ref
+
+SIZES = [128 * 512, 128 * 2048]
+DTYPES = [jnp.float32]
+
+
+def _data(rng, n, dtype):
+    a = jnp.asarray(rng.standard_normal(n), dtype)
+    b = jnp.asarray(rng.standard_normal(n), dtype)
+    return a, b
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_elementwise_ops_match_oracle(rng, n, dtype):
+    a, b = _data(rng, n, dtype)
+    np.testing.assert_allclose(ops.copy_pallas(a, interpret=True),
+                               ref.copy(a), rtol=1e-6)
+    np.testing.assert_allclose(ops.mul_pallas(a, interpret=True),
+                               ref.mul(a), rtol=1e-6)
+    np.testing.assert_allclose(ops.add_pallas(a, b, interpret=True),
+                               ref.add(a, b), rtol=1e-6)
+    np.testing.assert_allclose(ops.triad_pallas(a, b, interpret=True),
+                               ref.triad(a, b), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_dot_matches_oracle(rng, n):
+    a, b = _data(rng, n, jnp.float32)
+    got = ops.dot_pallas(a, b, interpret=True)
+    want = ref.dot(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_dot_block_rows_sweep(rng):
+    a, b = _data(rng, 128 * 1024, jnp.float32)
+    want = ref.dot(a, b)
+    for rows in (128, 256, 512):
+        got = ops.dot_pallas(a, b, interpret=True, block_rows=rows)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-3)
+
+
+def test_registry_backends_registered():
+    for op in ("copy", "mul", "add", "triad", "dot"):
+        k = registry.get(f"babelstream.{op}")
+        assert {"xla", "pallas", "pallas_interpret"} <= set(k.backends)
+
+
+def test_eq2_byte_model():
+    # paper Eq. 2: copy/mul move 2 arrays, add/triad 3, dot 2
+    n, isz = 1024, 4
+    assert babelstream_bytes("copy", n, isz) == 2 * n * isz
+    assert babelstream_bytes("add", n, isz) == 3 * n * isz
+    assert babelstream_bytes("triad", n, isz) == 3 * n * isz
+    assert babelstream_bytes("dot", n, isz) == 2 * n * isz
+    with pytest.raises(ValueError):
+        babelstream_bytes("nope", n, isz)

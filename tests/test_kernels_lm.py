@@ -1,0 +1,85 @@
+"""LM Pallas kernels (flash attention, RWKV6 WKV) vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.rwkv6 import ops as wkv_ops
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0),
+                                           (True, 128)])
+def test_flash_matches_oracle(rng, causal, window):
+    B, H, Kv, S, Dh = 2, 4, 2, 512, 64
+    q = _rand(rng, B, H, S, Dh)
+    k = _rand(rng, B, Kv, S, Dh)
+    v = _rand(rng, B, Kv, S, Dh)
+    want = fa_ops.flash_xla(q, k, v, causal=causal, window=window)
+    got = fa_ops.flash_pallas(q, k, v, causal=causal, window=window,
+                              bq=128, bk=128, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("bq,bk", [(64, 64), (128, 256), (256, 128)])
+def test_flash_block_shape_sweep(rng, bq, bk):
+    B, H, Kv, S, Dh = 1, 2, 1, 256, 32
+    q = _rand(rng, B, H, S, Dh)
+    k = _rand(rng, B, Kv, S, Dh)
+    v = _rand(rng, B, Kv, S, Dh)
+    want = fa_ops.flash_xla(q, k, v, causal=True)
+    got = fa_ops.flash_pallas(q, k, v, causal=True, bq=bq, bk=bk,
+                              interpret=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_bf16(rng):
+    B, H, Kv, S, Dh = 1, 2, 2, 256, 64
+    q = _rand(rng, B, H, S, Dh).astype(jnp.bfloat16)
+    k = _rand(rng, B, Kv, S, Dh).astype(jnp.bfloat16)
+    v = _rand(rng, B, Kv, S, Dh).astype(jnp.bfloat16)
+    want = fa_ops.flash_xla(q, k, v, causal=True).astype(jnp.float32)
+    got = fa_ops.flash_pallas(q, k, v, causal=True, bq=128, bk=128,
+                              interpret=True).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_wkv_matches_serial_oracle(rng, chunk):
+    B, H, S, Dh = 2, 3, 128, 32
+    r = _rand(rng, B, H, S, Dh, scale=0.5)
+    k = _rand(rng, B, H, S, Dh, scale=0.5)
+    v = _rand(rng, B, H, S, Dh, scale=0.5)
+    lw = -jnp.exp(jnp.clip(_rand(rng, B, H, S, Dh), -8, 1))
+    u = _rand(rng, H, Dh, scale=0.5)
+    want = wkv_ops.wkv_xla(r, k, v, lw, u)
+    got = wkv_ops.wkv_pallas(r, k, v, lw, u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_wkv_state_carried_across_chunks(rng):
+    """First-chunk output can't depend on later tokens; later chunks must.
+    Slow decay (-0.01/step) so cross-chunk state influence is measurable."""
+    B, H, S, Dh = 1, 1, 64, 16
+    r = _rand(rng, B, H, S, Dh, scale=0.5)
+    k = _rand(rng, B, H, S, Dh, scale=0.5)
+    v = _rand(rng, B, H, S, Dh, scale=0.5)
+    lw = jnp.full((B, H, S, Dh), -0.01)
+    u = _rand(rng, H, Dh, scale=0.5)
+    y1 = wkv_ops.wkv_pallas(r, k, v, lw, u, chunk=32, interpret=True)
+    v2 = v.at[:, :, 0].add(10.0)   # perturb an early token's value
+    y2 = wkv_ops.wkv_pallas(r, k, v2, lw, u, chunk=32, interpret=True)
+    # token 0 output unchanged? (depends only on its own diag term - yes
+    # via u bonus it does change). Check instead: later chunk outputs differ
+    assert float(jnp.max(jnp.abs(y1[:, :, 40:] - y2[:, :, 40:]))) > 1e-6
+    # and causality: perturbing a LATE token leaves early outputs unchanged
+    v3 = v.at[:, :, 50].add(10.0)
+    y3 = wkv_ops.wkv_pallas(r, k, v3, lw, u, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(y3[:, :, :50]),
+                               np.asarray(y1[:, :, :50]), rtol=1e-5,
+                               atol=1e-5)

@@ -1,0 +1,42 @@
+"""miniBUDE fasten Pallas kernel vs oracle + Eq. 3 FoM model."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import minibude_ops
+from repro.kernels.minibude import ops
+
+
+@pytest.mark.parametrize("natpro,natlig,nposes", [
+    (64, 8, 256), (96, 16, 512), (32, 4, 128),
+])
+def test_matches_oracle(natpro, natlig, nposes):
+    deck = ops.make_deck(natpro=natpro, natlig=natlig, nposes=nposes, seed=3)
+    want = ops.fasten_xla(*deck)
+    got = ops.fasten_pallas(*deck, interpret=True)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_deterministic_deck():
+    d1 = ops.make_deck(natpro=16, natlig=4, nposes=128, seed=5)
+    d2 = ops.make_deck(natpro=16, natlig=4, nposes=128, seed=5)
+    for a, b in zip(d1, d2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_energy_scale_invariance_under_pose_order():
+    """Permuting poses permutes energies (no cross-pose coupling)."""
+    deck = ops.make_deck(natpro=32, natlig=4, nposes=256, seed=1)
+    pp, ppar, lp, lpar, poses = deck
+    e = np.asarray(ops.fasten_xla(pp, ppar, lp, lpar, poses))
+    perm = np.random.default_rng(0).permutation(256)
+    e_perm = np.asarray(ops.fasten_xla(pp, ppar, lp, lpar, poses[:, perm]))
+    np.testing.assert_allclose(e_perm, e[perm], rtol=1e-5, atol=1e-5)
+
+
+def test_eq3_ops_model():
+    # paper Eq. 3
+    ppwi, nl, np_, poses = 4, 26, 938, 65536
+    per_wg = 28 * ppwi + nl * (2 + 18 * ppwi + np_ * (10 + 30 * ppwi))
+    assert minibude_ops(ppwi, nl, np_, poses) == per_wg * poses / ppwi

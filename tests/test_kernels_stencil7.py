@@ -1,0 +1,57 @@
+"""Seven-point stencil Pallas kernel vs oracle + property tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.metrics import stencil7_effective_bytes
+from repro.kernels.stencil7 import ops, ref
+
+
+@pytest.mark.parametrize("shape,by", [
+    ((8, 16, 128), 8), ((6, 32, 256), 16), ((4, 8, 128), 4),
+    ((12, 24, 128), 8),
+])
+def test_matches_oracle_fp32(rng, shape, by):
+    u = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    coeffs = ref.default_coefficients(1.0, 2.0, 3.0)
+    got = ops.laplacian_pallas(u, *coeffs, by=by, interpret=True)
+    want = ops.laplacian_xla(u, *coeffs)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_boundary_zero(rng):
+    u = jnp.asarray(rng.standard_normal((8, 16, 128)), jnp.float32)
+    out = np.asarray(ops.laplacian_pallas(u, by=8, interpret=True))
+    assert (out[0] == 0).all() and (out[-1] == 0).all()
+    assert (out[:, 0] == 0).all() and (out[:, -1] == 0).all()
+    assert (out[:, :, 0] == 0).all() and (out[:, :, -1] == 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(scale=st.floats(-4.0, 4.0))
+def test_linearity(scale):
+    """Laplacian is linear: L(a*u) == a*L(u)."""
+    rng = np.random.default_rng(7)
+    u = jnp.asarray(rng.standard_normal((4, 8, 128)), jnp.float32)
+    l1 = ops.laplacian_xla(u * scale)
+    l2 = ops.laplacian_xla(u) * scale
+    np.testing.assert_allclose(l1, l2, rtol=1e-3, atol=1e-3)
+
+
+def test_constant_field_interior_zero():
+    """Laplacian of a constant field vanishes on the interior."""
+    u = jnp.ones((6, 8, 128), jnp.float32)
+    out = np.asarray(ops.laplacian_pallas(u, by=8, interpret=True))
+    np.testing.assert_allclose(out[1:-1, 1:-1, 1:-1], 0.0, atol=1e-4)
+
+
+def test_eq1_byte_model():
+    # paper Eq. 1
+    L, isz = 512, 8
+    fetch = (L ** 3 - 8 - 12 * (L - 2)) * isz
+    write = (L - 2) ** 3 * isz
+    assert stencil7_effective_bytes(L, isz) == fetch + write

@@ -1,0 +1,109 @@
+"""Beyond-paper performance levers must be numerics-safe (EXPERIMENTS §Perf)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.common import apply_norm, norm_init
+from repro.models.chunked_attention import attend_chunked
+from repro.training.train_step import TrainConfig, make_train_state, train_step
+
+
+def _batch(cfg, key, b=4, s=32):
+    return {
+        "tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "targets": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+        "mask": jnp.ones((b, s), jnp.float32),
+    }
+
+
+def test_zero1_matches_baseline_loss():
+    cfg0 = get_config("granite-3-8b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(cfg0, key)
+    tcfg = TrainConfig(microbatches=2)
+    batch = _batch(cfg0, key)
+    losses = {}
+    for name, over in [("base", {}), ("zero1", {"zero1_weights": True})]:
+        cfg = dataclasses.replace(cfg0, **over)
+        state = make_train_state(params, tcfg)
+        state, m = jax.jit(
+            lambda s, b: train_step(s, b, cfg=cfg, tcfg=tcfg))(state, batch)
+        losses[name] = float(m["loss"])
+    assert abs(losses["base"] - losses["zero1"]) < 1e-2
+
+
+def test_moe_stopgrad_matches_baseline_loss_and_router_grads():
+    cfg0 = get_config("deepseek-moe-16b", smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(cfg0, key)
+    tcfg = TrainConfig(microbatches=1, remat=False)
+    batch = _batch(cfg0, key, b=2, s=16)
+    outs = {}
+    for name, over in [("base", {}), ("sg", {"moe_stopgrad_dispatch": True})]:
+        cfg = dataclasses.replace(cfg0, **over)
+        state = make_train_state(params, tcfg)
+        new_state, m = jax.jit(
+            lambda s, b: train_step(s, b, cfg=cfg, tcfg=tcfg))(state, batch)
+        outs[name] = (float(m["loss"]), new_state["params"])
+    # identical forward loss
+    assert abs(outs["base"][0] - outs["sg"][0]) < 1e-4
+    # router still learns (gradient flows via combine gates)
+    r0 = params["segments"][0]["moe"]["router"]
+    r1 = outs["sg"][1]["segments"][0]["moe"]["router"]
+    assert float(jnp.max(jnp.abs(r1 - r0))) > 0
+
+
+def test_bf16_norm_close_to_f32_norm():
+    p = norm_init(64, "rmsnorm", jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 16, 64)),
+                    jnp.bfloat16)
+    a = apply_norm(p, x, "rmsnorm", bf16_mul=False).astype(jnp.float32)
+    b = apply_norm(p, x, "rmsnorm", bf16_mul=True).astype(jnp.float32)
+    np.testing.assert_allclose(a, b, rtol=2e-2, atol=2e-2)
+    pl = norm_init(64, "layernorm", jnp.float32)
+    a = apply_norm(pl, x, "layernorm", bf16_mul=False).astype(jnp.float32)
+    b = apply_norm(pl, x, "layernorm", bf16_mul=True).astype(jnp.float32)
+    np.testing.assert_allclose(a, b, rtol=3e-2, atol=3e-2)
+
+
+def test_attn_bf16_intermediates_tolerance():
+    rng = np.random.default_rng(0)
+    B, S, H, Kv, Dh = 1, 2048, 4, 2, 32
+    f = lambda *sh: jnp.asarray(rng.standard_normal(sh), jnp.float32)
+    q, k, v = f(B, S, H, Dh), f(B, S, Kv, Dh), f(B, S, Kv, Dh)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    a = attend_chunked(q, k, v, pos, pos, n_kv_heads=Kv, causal=True)
+    b = attend_chunked(q, k, v, pos, pos, n_kv_heads=Kv, causal=True,
+                       bf16_intermediates=True)
+    np.testing.assert_allclose(a, b, rtol=3e-2, atol=3e-2)
+
+
+def test_vocab_padding_masks_invalid_logits():
+    cfg = dataclasses.replace(get_config("granite-3-8b", smoke=True),
+                              vocab_size=250, vocab_pad_multiple=64)
+    assert cfg.padded_vocab == 256
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    assert params["embed"].shape[0] == 256
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 250)
+    logits, _, _ = T.forward(params, cfg, tokens)
+    assert logits.shape[-1] == 256
+    pad_logits = np.asarray(logits[..., 250:], np.float32)
+    assert (pad_logits < -1e8).all()
+
+
+def test_last_only_matches_full_forward():
+    cfg = get_config("stablelm-1.6b", smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                cfg.vocab_size)
+    full, _, _ = T.forward(params, cfg, tokens)
+    last, _, _ = T.forward(params, cfg, tokens, last_only=True)
+    np.testing.assert_allclose(np.asarray(last[:, 0], np.float32),
+                               np.asarray(full[:, -1], np.float32),
+                               rtol=1e-3, atol=1e-3)

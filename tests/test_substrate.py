@@ -1,0 +1,212 @@
+"""Substrate tests: optimizer, compression, losses, data, checkpoint, FT."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.distributed.fault_tolerance import (Heartbeat, PreemptionGuard,
+                                               StragglerMonitor,
+                                               elastic_mesh_shape)
+from repro.optim import adamw, compression
+from repro.training.losses import softmax_xent
+
+
+# --------------------------------------------------------------------------
+# optimizer
+# --------------------------------------------------------------------------
+def test_adamw_quadratic_converges():
+    cfg = adamw.AdamWConfig(lr_peak=0.1, warmup_steps=5, decay_steps=200,
+                            weight_decay=0.0, grad_clip=10.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init_state(params)
+    for _ in range(150):
+        grads = {"w": 2 * params["w"]}      # d/dw (w^2)
+        params, state, _ = adamw.apply_updates(params, grads, state, cfg)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_grad_clip_bounds_update():
+    cfg = adamw.AdamWConfig(lr_peak=1.0, warmup_steps=0, decay_steps=10,
+                            grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = adamw.init_state(params)
+    huge = {"w": jnp.full(4, 1e6)}
+    newp, _, metrics = adamw.apply_updates(params, huge, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5
+    assert float(jnp.max(jnp.abs(newp["w"]))) < 2.0   # clipped
+
+
+def test_cosine_schedule_shape():
+    cfg = adamw.AdamWConfig(lr_peak=1.0, warmup_steps=10, decay_steps=100,
+                            lr_min_ratio=0.1)
+    lrs = [float(adamw.cosine_lr(cfg, jnp.asarray(s))) for s in
+           (0, 5, 10, 55, 100, 1000)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6            # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6            # peak
+    assert 0.1 < lrs[3] < 1.0                  # decaying
+    assert abs(lrs[4] - 0.1) < 1e-6            # floor
+    assert abs(lrs[5] - 0.1) < 1e-6
+
+
+# --------------------------------------------------------------------------
+# compression (error feedback property)
+# --------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_error_feedback_accumulates_true_gradient(seed):
+    """sum_t compressed_t -> sum_t g_t within one final quantization step."""
+    rng = np.random.default_rng(seed)
+    g_seq = [jnp.asarray(rng.standard_normal(32) * 0.1, jnp.float32)
+             for _ in range(20)]
+    residual = {"g": jnp.zeros(32)}
+    total_sent = jnp.zeros(32)
+    for g in g_seq:
+        sent, residual = compression.ef_compress_tree(
+            {"g": g}, residual)
+        total_sent = total_sent + sent["g"]
+    true_total = sum(g_seq)
+    # remaining error is exactly the residual (bounded by one quant step)
+    np.testing.assert_allclose(np.asarray(total_sent + residual["g"]),
+                               np.asarray(true_total), rtol=1e-5, atol=1e-5)
+
+
+def test_int8_quantization_bounds():
+    x = jnp.asarray([-3.0, 0.0, 1.5, 3.0])
+    q, s = compression.quantize_int8(x)
+    deq = compression.dequantize_int8(q, s)
+    assert np.max(np.abs(np.asarray(deq - x))) <= float(s) * 0.5 + 1e-7
+
+
+# --------------------------------------------------------------------------
+# losses
+# --------------------------------------------------------------------------
+def test_xent_uniform_logits():
+    v = 32
+    logits = jnp.zeros((2, 3, v))
+    targets = jnp.zeros((2, 3), jnp.int32)
+    loss, m = softmax_xent(logits, targets, z_loss=0.0)
+    np.testing.assert_allclose(float(loss), np.log(v), rtol=1e-5)
+
+
+def test_xent_mask_excludes_tokens():
+    logits = jnp.asarray(np.random.default_rng(0).standard_normal((1, 4, 8)),
+                         jnp.float32)
+    targets = jnp.zeros((1, 4), jnp.int32)
+    full, _ = softmax_xent(logits, targets, z_loss=0.0)
+    m = jnp.asarray([[1, 1, 0, 0]], jnp.float32)
+    masked, _ = softmax_xent(logits, targets, mask=m, z_loss=0.0)
+    ref2, _ = softmax_xent(logits[:, :2], targets[:, :2], z_loss=0.0)
+    np.testing.assert_allclose(float(masked), float(ref2), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+def test_data_deterministic_and_seekable():
+    cfg = DataConfig(vocab_size=1000, seq_len=16, global_batch=4)
+    d1 = SyntheticLM(cfg)
+    d2 = SyntheticLM(cfg)
+    d2.seek(3)
+    b1 = [d1.batch_at(i) for i in range(5)]
+    np.testing.assert_array_equal(b1[3]["tokens"], next(iter(d2))["tokens"])
+    # targets are next-token shifted
+    np.testing.assert_array_equal(b1[0]["tokens"][:, 1:],
+                                  b1[0]["targets"][:, :-1])
+
+
+def test_data_host_sharding_disjoint():
+    k = dict(vocab_size=1000, seq_len=16, global_batch=8, n_hosts=2)
+    h0 = SyntheticLM(DataConfig(host_id=0, **k)).batch_at(0)
+    h1 = SyntheticLM(DataConfig(host_id=1, **k)).batch_at(0)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_prefetcher_yields_in_order():
+    cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=2)
+    src = SyntheticLM(cfg)
+    want = [src.batch_at(i)["tokens"] for i in range(3)]
+    pf = Prefetcher(SyntheticLM(cfg), depth=2)
+    got = [next(pf)["tokens"] for _ in range(3)]
+    pf.close()
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(w, g)
+
+
+# --------------------------------------------------------------------------
+# checkpoint
+# --------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+             "opt": {"step": jnp.asarray(7, jnp.int32)}}
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(7, state, metadata={"arch": "test"})
+    template = jax.tree.map(lambda a: jnp.zeros_like(a), state)
+    restored, manifest = mgr.restore(template)
+    assert manifest["step"] == 7 and manifest["arch"] == "test"
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), restored, state)
+
+
+def test_checkpoint_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"w": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.latest_step() == 4
+    dirs = sorted(os.listdir(tmp_path))
+    assert len([d for d in dirs if d.startswith("step_")]) == 2
+
+
+def test_checkpoint_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones(4)}, blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore({"w": jnp.ones((3, 3))})
+
+
+# --------------------------------------------------------------------------
+# fault tolerance
+# --------------------------------------------------------------------------
+def test_straggler_monitor_flags_slow_steps():
+    mon = StragglerMonitor(alpha=0.5, factor=2.0, warmup=3)
+    for i in range(5):
+        assert not mon.observe(i, 1.0)
+    assert mon.observe(5, 5.0)            # 5x EMA -> straggler
+    assert mon.events and mon.events[0]["step"] == 5
+    assert not mon.observe(6, 1.0)        # EMA not poisoned
+
+
+def test_preemption_guard_flag():
+    g = PreemptionGuard().install()
+    assert not g.should_stop
+    g.request_stop()
+    assert g.should_stop
+
+
+def test_heartbeat_writes(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb"), interval_s=0.0)
+    hb.beat(12)
+    assert (tmp_path / "hb").read_text().startswith("12 ")
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 4096))
+def test_elastic_mesh_shape_factors(n):
+    shape = elastic_mesh_shape(n)
+    assert shape["data"] * shape["model"] == n
