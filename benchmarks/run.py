@@ -10,6 +10,8 @@ Emits ``name,us_per_call,derived`` CSV (scaffold contract).  Mapping:
     portability      -> paper Table 5 (Eq. 4 Phi-bar)
     roofline_kernels -> paper Fig. 2 + Tables 2-3 (AI / bound placement)
     lm_step          -> framework-level LM step timings
+    serving          -> continuous-batching engine tok/s + p50/p95 latency
+                        under a Poisson-ish synthetic arrival trace
 """
 
 from __future__ import annotations
@@ -21,7 +23,7 @@ import traceback
 from benchmarks.common import header
 
 MODULES = ["stencil", "babelstream", "minibude", "hartree_fock",
-           "portability", "roofline_kernels", "lm_step"]
+           "portability", "roofline_kernels", "lm_step", "serving"]
 
 
 def main() -> None:

@@ -1,0 +1,66 @@
+"""Serving-engine benchmark: throughput + per-request latency under load.
+
+Drives the fixed-shape continuous-batching engine with a Poisson-ish
+synthetic arrival trace (repro/serving/trace.py) on a smoke-size model and
+emits one row:
+
+    serving,<us_per_decode_step>,<tok/s + p50/p95 request latency>
+
+A small warmup trace triggers the two compiles (one prefill shape, one
+decode shape) before timing; the measured run must not retrace — the row is
+annotated `RETRACED` if it does, since that invalidates the timing.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serving import ServingEngine, latency_summary, synthetic_trace
+
+ARCH = "granite-3-8b"
+NUM_SLOTS = 4
+CACHE_LEN = 64
+PREFILL_LEN = 16
+N_REQUESTS = 24
+RATE_RPS = 50.0
+MAX_NEW = 16
+
+
+def run() -> None:
+    cfg = get_config(ARCH, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(params, cfg, num_slots=NUM_SLOTS,
+                        cache_len=CACHE_LEN, prefill_len=PREFILL_LEN)
+
+    warm = synthetic_trace(NUM_SLOTS, vocab_size=cfg.vocab_size, rate=1e6,
+                           max_prompt=PREFILL_LEN, max_new_tokens=4,
+                           seed=7, uid_base=10_000)
+    eng.run(warm)
+    traces_before = (eng.stats["prefill_traces"], eng.stats["decode_traces"])
+    steps_before = eng.stats["decode_steps"]
+    toks_before = eng.stats["tokens_generated"]
+
+    trace = synthetic_trace(N_REQUESTS, vocab_size=cfg.vocab_size,
+                            rate=RATE_RPS, max_prompt=PREFILL_LEN,
+                            max_new_tokens=MAX_NEW, seed=1)
+    t0 = time.perf_counter()
+    done = eng.run(trace)
+    wall = time.perf_counter() - t0
+
+    steps = eng.stats["decode_steps"] - steps_before
+    toks = eng.stats["tokens_generated"] - toks_before
+    lat = latency_summary(done)
+    retraced = (eng.stats["prefill_traces"],
+                eng.stats["decode_traces"]) != traces_before
+    derived = (f"{toks / wall:.1f} tok/s "
+               f"p50 {lat['p50_latency_s'] * 1e3:.1f} ms "
+               f"p95 {lat['p95_latency_s'] * 1e3:.1f} ms "
+               f"({N_REQUESTS} reqs @ {RATE_RPS:.0f} rps "
+               f"slots={NUM_SLOTS})"
+               + (" RETRACED" if retraced else ""))
+    emit("serving", wall / max(steps, 1), derived)

@@ -1,11 +1,16 @@
-"""Serving driver: batched prefill + decode with continuous batching slots.
+"""Serving driver: fixed-shape continuous batching on the slot engine.
 
-    PYTHONPATH=src python examples/serve_decode.py --requests 12 --batch 4
+    PYTHONPATH=src python examples/serve_decode.py --requests 12 --slots 4
 
-Serves a reduced-config model: requests arrive with different prompt
-lengths, are left-packed into fixed decode slots, prefilled, then decoded
-step-by-step; finished sequences release their slot to queued requests
-(continuous batching at slot granularity).
+Requests arrive on a Poisson-ish trace with ragged prompt lengths and are
+admitted into freed KV-cache slots mid-decode (continuous batching at slot
+granularity).  The engine compiles exactly two programs — one (1,
+prefill_len) masked prefill and one (num_slots, 1) decode step — and never
+recompiles as requests arrive/finish: prompts are left-padded to the fixed
+prefill shape with pads masked out of attention (no attending over pad
+token 0), decode positions track each request's TRUE prompt length, and
+every request samples from its own PRNG key stream (no repeated
+continuations across batches).
 """
 
 from __future__ import annotations
@@ -14,65 +19,55 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
-from repro.training.serve_step import decode_step, prefill, sample
+from repro.serving import ServingEngine, latency_summary, synthetic_trace
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
     ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--prefill-len", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="mean request arrival rate (requests/second)")
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+    engine = ServingEngine(params, cfg, num_slots=args.slots,
+                           cache_len=args.cache_len,
+                           prefill_len=args.prefill_len,
+                           temperature=args.temperature)
 
-    # synthetic request queue: (id, prompt)
-    queue = [(i, rng.integers(2, cfg.vocab_size,
-                              rng.integers(4, 17)).astype(np.int32))
-             for i in range(args.requests)]
-    done = {}
+    trace = synthetic_trace(args.requests, vocab_size=cfg.vocab_size,
+                            rate=args.rate, max_prompt=args.prefill_len,
+                            max_new_tokens=args.max_new)
     t_start = time.time()
-    total_tokens = 0
-
-    dec = jax.jit(lambda p, t, po, c: decode_step(p, cfg, t, po, c))
-
-    while queue:
-        # fill a batch of slots
-        active = queue[:args.batch]
-        queue = queue[args.batch:]
-        plen = max(len(p) for _, p in active)
-        prompts = np.zeros((len(active), plen), np.int32)
-        for j, (_, p) in enumerate(active):
-            prompts[j, plen - len(p):] = p      # left-pad
-        last, caches, _ = prefill(params, cfg, jnp.asarray(prompts),
-                                  cache_len=args.cache_len)
-        toks = sample(last, jax.random.PRNGKey(1))[:, None]
-        outs = [toks]
-        for i in range(1, args.max_new):
-            pos = jnp.full((len(active), 1), plen + i - 1, jnp.int32)
-            logits, caches = dec(params, toks, pos, caches)
-            toks = sample(logits, jax.random.PRNGKey(i))[:, None]
-            outs.append(toks)
-        gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
-        for j, (rid, _) in enumerate(active):
-            done[rid] = gen[j]
-            total_tokens += gen.shape[1]
-        print(f"batch of {len(active)} served; "
-              f"{len(done)}/{args.requests} requests complete")
-
+    done = engine.run(trace)
     dt = time.time() - t_start
-    print(f"served {args.requests} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s on this host)")
-    print("sample output:", done[0][:10].tolist())
+
+    for req in sorted(done, key=lambda r: r.uid):
+        print(f"req {req.uid:3d} prompt_len {req.prompt_len:2d} "
+              f"latency {req.latency() * 1e3:7.1f} ms "
+              f"tokens {req.generated[:8]}...")
+    lat = latency_summary(done)
+    s = engine.stats
+    print(f"\nserved {len(done)} requests, {s['tokens_generated']} tokens "
+          f"in {dt:.2f}s ({s['tokens_generated'] / dt:.1f} tok/s)")
+    print(f"latency p50 {lat['p50_latency_s'] * 1e3:.1f} ms "
+          f"p95 {lat['p95_latency_s'] * 1e3:.1f} ms; "
+          f"ttft p50 {lat['p50_ttft_s'] * 1e3:.1f} ms")
+    print(f"compiled shapes: prefill x{s['prefill_traces']} "
+          f"decode x{s['decode_traces']} "
+          f"({s['prefill_calls']} prefills, {s['decode_steps']} decode steps)")
+    assert s["prefill_traces"] == 1 and s["decode_traces"] == 1, \
+        "engine recompiled — fixed-shape contract violated"
 
 
 if __name__ == "__main__":

@@ -63,6 +63,28 @@ _ELEMENTWISE_FLOP_OPS = {
 }
 
 
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_names(ins_line: str) -> List[str]:
+    """Operand instruction names of `... = <shape> op(<operands>), attrs`.
+
+    Depending on the XLA version the operand list is either bare names
+    (`dot(%a, %b)`) or typed (`dot(f32[64,128]{1,0} %a, f32[...] %b)`); the
+    latter breaks naive comma-splitting because shapes embed commas.  `%name`
+    tokens are unambiguous in both formats.
+    """
+    args = re.search(r"\(([^)]*)\)", ins_line)
+    if not args:
+        return []
+    names = _OPERAND_NAME.findall(args.group(1))
+    if names:
+        return names
+    # no '%' sigils at all (stripped dumps): fall back to comma-split words
+    return [a.strip().split()[-1] for a in args.group(1).split(",")
+            if a.strip()]
+
+
 def _shape_elems_bytes(shape_text: str) -> Tuple[int, int]:
     """total (elements, bytes) across all array shapes in the text."""
     elems = tot = 0
@@ -168,11 +190,10 @@ class _Module:
 
     def _dot_flops(self, ins: _Instr, symbols: Dict[str, str]) -> float:
         out_elems, _ = _shape_elems_bytes(ins.shape)
-        args = re.search(r"\(([^)]*)\)", ins.line)
-        if not args:
+        names = _operand_names(ins.line)
+        if not names:
             return 0.0
-        lhs = args.group(1).split(",")[0].strip().lstrip("%")
-        lhs_shape = symbols.get(lhs, "")
+        lhs_shape = symbols.get(names[0], "")
         sm = _SHAPE.search(lhs_shape)
         if not sm:
             return 0.0
@@ -206,10 +227,9 @@ class _Module:
                 c.transcendentals += out_elems
         elif op == "reduce" or op == "reduce-window":
             # count reduction input elements
-            args = re.search(r"\(([^)]*)\)", ins.line)
-            if args:
-                first = args.group(1).split(",")[0].strip().lstrip("%")
-                in_elems, _ = _shape_elems_bytes(symbols.get(first, ""))
+            names = _operand_names(ins.line)
+            if names:
+                in_elems, _ = _shape_elems_bytes(symbols.get(names[0], ""))
                 c.flops += in_elems
         elif op.startswith("all-") or op.startswith("reduce-scatter") \
                 or op.startswith("collective-permute"):
@@ -228,13 +248,10 @@ class _Module:
             # FLOPs/collectives counted above as usual; HBM traffic is only
             # the operand blocks the kernel DMAs in for its matmuls.
             if op == "dot":
-                args = re.search(r"\(([^)]*)\)", ins.line)
-                if args:
-                    for a in args.group(1).split(","):
-                        a = a.strip().lstrip("%")
-                        if a in symbols:
-                            _, ob = _shape_elems_bytes(symbols[a])
-                            c.hbm_bytes += ob
+                for a in _operand_names(ins.line):
+                    if a in symbols:
+                        _, ob = _shape_elems_bytes(symbols[a])
+                        c.hbm_bytes += ob
             return c
         if not in_fusion and op not in (
                 "parameter", "constant", "tuple", "get-tuple-element",
@@ -245,23 +262,17 @@ class _Module:
                 c.hbm_bytes += 2 * out_bytes          # read slice + write
             elif op in ("dynamic-update-slice", "scatter"):
                 # traffic ~= the update payload (result aliases the buffer)
-                args = re.search(r"\(([^)]*)\)", ins.line)
+                parts = _operand_names(ins.line)
                 upd_bytes = out_bytes
-                if args:
-                    parts = [a.strip().lstrip("%")
-                             for a in args.group(1).split(",")]
-                    if len(parts) >= 2 and parts[1] in symbols:
-                        _, upd_bytes = _shape_elems_bytes(symbols[parts[1]])
+                if len(parts) >= 2 and parts[1] in symbols:
+                    _, upd_bytes = _shape_elems_bytes(symbols[parts[1]])
                 c.hbm_bytes += 2 * upd_bytes
             else:
                 operand_bytes = 0
-                args = re.search(r"\(([^)]*)\)", ins.line)
-                if args:
-                    for a in args.group(1).split(","):
-                        a = a.strip().lstrip("%")
-                        if a in symbols:
-                            _, ob = _shape_elems_bytes(symbols[a])
-                            operand_bytes += ob
+                for a in _operand_names(ins.line):
+                    if a in symbols:
+                        _, ob = _shape_elems_bytes(symbols[a])
+                        operand_bytes += ob
                 c.hbm_bytes += out_bytes + operand_bytes
         return c
 

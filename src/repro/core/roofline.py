@@ -99,7 +99,8 @@ def roofline_from_compiled(compiled: Any, chip: ChipSpec = TPU_V5E,
     hc = analyze_hlo(text, vmem_scopes=KERNEL_VMEM_SCOPES
                      if kernel_adjusted else ())
 
-    cost = compiled.cost_analysis()
+    from repro.core.hlo_analysis import xla_cost_analysis
+    cost = xla_cost_analysis(compiled)
     xla_flops = float(cost.get("flops", 0.0))
     xla_bytes = float(cost.get("bytes accessed", 0.0))
 

@@ -9,17 +9,25 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax.sharding.AxisType (and make_mesh's axis_types kwarg) only exist on
+    # newer jax; older versions treat every axis as Auto already.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi_pod adds a leading pod=2 axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Whatever this process actually has (CPU tests, examples)."""
     n = len(jax.devices())
     model = model if n % model == 0 else 1
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n // model, model), ("data", "model"))

@@ -133,12 +133,16 @@ def attention_apply(p: Params, x: jnp.ndarray, *, n_heads: int,
             new_cache = None
         else:
             cache_len = cache["k"].shape[1]
-            # ring-buffer slot for each new token
-            slots = positions % cache_len                # (B, S)
+            # ring-buffer slot for each new token; pad tokens (position -1,
+            # masked prefill) are routed out of bounds and dropped — slot
+            # -1 % cache_len would collide with a real token's slot on
+            # sliding-window ring buffers shorter than the padded length
+            slots = jnp.where(positions >= 0, positions % cache_len,
+                              cache_len)                 # (B, S)
             bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
-            ck = cache["k"].at[bidx, slots].set(k)
-            cv = cache["v"].at[bidx, slots].set(v)
-            cpos = cache["pos"].at[bidx, slots].set(positions)
+            ck = cache["k"].at[bidx, slots].set(k, mode="drop")
+            cv = cache["v"].at[bidx, slots].set(v, mode="drop")
+            cpos = cache["pos"].at[bidx, slots].set(positions, mode="drop")
             new_cache = {"k": ck, "v": cv, "pos": cpos}
             k, v, k_pos = ck, cv, cpos
 

@@ -246,6 +246,22 @@ def init_params(cfg: ModelConfig, key) -> Params:
     return params
 
 
+def leftpad_positions(lengths: jnp.ndarray, seq_len: int) -> jnp.ndarray:
+    """Positions for left-padded prompts: (B,) true lengths -> (B, S).
+
+    Pad tokens get position -1, which the position-based attention mask
+    treats as "empty" (`k_pos >= 0` fails): pad keys are never attended, pad
+    queries produce garbage that callers must ignore, and the KV-cache write
+    for a pad is dropped entirely (attention.attention_apply routes
+    position < 0 out of bounds with scatter mode="drop", so pads cannot
+    clobber a real slot even on sliding-window ring buffers).  Real tokens
+    get positions 0..L-1 so downstream decode continues at position L.
+    """
+    idx = jnp.arange(seq_len, dtype=jnp.int32)[None, :]
+    pos = idx - (seq_len - lengths.astype(jnp.int32))[:, None]
+    return jnp.where(pos >= 0, pos, -1)
+
+
 def _sinusoidal(positions, d):
     half = d // 2
     freqs = jnp.exp(-math.log(10000.0)
@@ -343,7 +359,7 @@ def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray,
 def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             positions=None, caches=None, frames=None, patches=None,
             memory=None, hints: ShardingHints = NO_HINTS,
-            remat: bool = False, last_only: bool = False):
+            remat: bool = False, last_only: bool = False, lengths=None):
     """Full forward. tokens (B, S) -> logits (B, S, V), caches', aux.
 
     frames: (B, T, D) stub audio frontend output (enc-dec archs).
@@ -352,12 +368,18 @@ def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     memory: precomputed encoder output (decode steps skip re-encoding).
     last_only: project logits for the final position only (prefill serving —
     avoids materializing the (B, S, V) tensor).
+    lengths: (B,) true prompt lengths for left-padded batched prefill; pads
+    are masked out of attention via position -1 (see leftpad_positions).
+    Ignored when explicit positions are given.
     """
     cdt = cfg.cdtype()
     b, s = tokens.shape
     if positions is None:
-        positions = jnp.broadcast_to(
-            jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if lengths is not None:
+            positions = leftpad_positions(lengths, s)
+        else:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     x = params["embed"].astype(cdt)[tokens]
     if patches is not None:
         p_len = patches.shape[1]

@@ -1,0 +1,222 @@
+"""Fixed-shape continuous-batching decode engine.
+
+The engine owns a (num_slots, cache_len) KV cache and exactly TWO compiled
+programs, hit once each and never again as requests arrive/finish:
+
+  * prefill: (1, prefill_len) left-padded prompt -> per-slot cache insert.
+    Prompts are padded to one fixed length and masked via position -1
+    (models/transformer.leftpad_positions), so every prompt length shares a
+    single compiled shape and pad tokens never corrupt logits or KV entries.
+    The freshly-built single-row cache is scattered into the engine cache at
+    the assigned slot (MaxText-style prefill-insert).
+  * decode: one token for ALL num_slots slots, (num_slots, 1).  Inactive
+    slots decode garbage into their own (about-to-be-overwritten) cache rows
+    and their sampled tokens are ignored — the shape never changes, so
+    requests joining or leaving mid-decode cause no recompilation.
+
+Scheduling is slot-granular continuous batching (vLLM-style): a request
+queue admits work into freed slots between decode steps, each slot tracks
+its own absolute position (= true prompt length + tokens generated, never
+the padded length), and every request owns an independent PRNG key stream
+folded from its uid so sampled continuations never repeat across requests
+or batches.
+
+Supported models: decoder-only attention archs (dense / MoE / SWA).  RWKV
+and SSM/hybrid state caches and encoder-decoder memory are per-request state
+this slot scatter does not yet carry; MoE capacity routing is batch-coupled,
+so MoE outputs can differ from unbatched decode.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward, init_caches
+from repro.training.serve_step import decode_step, sample, sample_per_slot
+from repro.serving.request import Request, RequestQueue
+from repro.serving.slots import SlotAllocator
+
+
+def scatter_slot_cache(big, small, slot):
+    """Insert a batch=1 cache pytree into the engine cache at `slot`.
+
+    Eager-layer leaves are (batch, ...); scan-segment leaves are stacked
+    (n_layers, batch, ...) — the batch axis is 0 vs 1 respectively.
+    """
+    def upd(axis):
+        return lambda b, s: jax.lax.dynamic_update_slice_in_dim(
+            b, s.astype(b.dtype), slot, axis)
+
+    return {
+        "eager": jax.tree.map(upd(0), big["eager"], small["eager"]),
+        "segments": [jax.tree.map(upd(1), bg, sm)
+                     for bg, sm in zip(big["segments"], small["segments"])],
+    }
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 4,
+                 cache_len: int = 128, prefill_len: int = 32,
+                 temperature: float = 0.0, seed: int = 0):
+        if cfg.rwkv or cfg.ssm_state or cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "slot engine supports decoder-only attention archs; "
+                f"{cfg.name} carries per-request recurrent/encoder state")
+        if prefill_len > cache_len:
+            raise ValueError("prefill_len must fit in cache_len")
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.prefill_len = prefill_len
+        self.temperature = temperature
+
+        self.caches = init_caches(cfg, num_slots, cache_len)
+        self.tok_buf = np.zeros((num_slots, 1), np.int32)
+        self.pos_buf = np.zeros((num_slots, 1), np.int32)
+        self.slot_req: List[Optional[Request]] = [None] * num_slots
+        self.slots = SlotAllocator(num_slots)
+        self.queue = RequestQueue()
+        self._base_key = jax.random.PRNGKey(seed)
+        self._t0 = time.perf_counter()
+
+        self.stats: Dict[str, int] = {
+            "prefill_traces": 0, "decode_traces": 0,
+            "prefill_calls": 0, "decode_steps": 0,
+            "requests_finished": 0, "tokens_generated": 0,
+        }
+        self._build_fns()
+
+    # ------------------------------------------------------------------
+    def _build_fns(self) -> None:
+        cfg, cache_len, temp = self.cfg, self.cache_len, self.temperature
+        stats = self.stats
+
+        def prefill_fn(params, tokens, lengths, slot, key, caches):
+            stats["prefill_traces"] += 1        # runs only when (re)traced
+            small = init_caches(cfg, 1, cache_len)
+            logits, small, _ = forward(params, cfg, tokens, caches=small,
+                                       lengths=lengths, last_only=True)
+            caches = scatter_slot_cache(caches, small, slot)
+            return sample(logits[:, -1], key, temp)[0], caches
+
+        def decode_fn(params, tokens, positions, keys, caches):
+            stats["decode_traces"] += 1
+            logits, caches = decode_step(params, cfg, tokens, positions,
+                                         caches)
+            return sample_per_slot(logits, keys, temp), caches
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+
+    def _clock(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def active_count(self) -> int:
+        return self.slots.in_use()
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.prompt_len < 1 or req.prompt_len > self.prefill_len:
+            raise ValueError(
+                f"prompt length {req.prompt_len} outside [1, "
+                f"{self.prefill_len}]")
+        if req.prompt_len + req.max_new_tokens > self.cache_len:
+            raise ValueError("prompt + max_new_tokens exceeds cache_len")
+        if req.key is None:
+            req.key = jax.random.fold_in(self._base_key, req.uid)
+        self.queue.submit(req)
+
+    def _finish(self, slot: int, req: Request, now: float,
+                finished: List[Request]) -> None:
+        req.t_done = now
+        self.slot_req[slot] = None
+        self.slots.free(slot)
+        self.stats["requests_finished"] += 1
+        finished.append(req)
+
+    def _admit(self, req: Request, now: float,
+               finished: List[Request]) -> None:
+        slot = self.slots.alloc()
+        self.slot_req[slot] = req
+        req.t_admitted = now
+        L = req.prompt_len
+        toks = np.zeros((1, self.prefill_len), np.int32)
+        toks[0, self.prefill_len - L:] = req.prompt        # left-pad
+        if self.temperature > 0.0:
+            req.key, sub = jax.random.split(req.key)
+        else:
+            sub = req.key       # greedy: sample() never consumes the key
+        tok0, self.caches = self._prefill(
+            self.params, jnp.asarray(toks),
+            jnp.asarray([L], jnp.int32), np.int32(slot), sub, self.caches)
+        self.stats["prefill_calls"] += 1
+        tok0 = int(tok0)
+        now = self._clock()
+        req.t_first_token = now
+        req.generated.append(tok0)
+        self.stats["tokens_generated"] += 1
+        if len(req.generated) >= req.max_new_tokens or tok0 == req.eos_id:
+            self._finish(slot, req, now, finished)
+            return
+        self.tok_buf[slot, 0] = tok0
+        self.pos_buf[slot, 0] = L        # true length, not padded length
+
+    # ------------------------------------------------------------------
+    def step(self, now: Optional[float] = None) -> List[Request]:
+        """Admit ready requests into free slots, then decode one token for
+        every slot.  Returns the requests that finished this step."""
+        if now is None:
+            now = self._clock()
+        finished: List[Request] = []
+        while self.slots.available() and self.queue.has_ready(now):
+            self._admit(self.queue.pop_ready(now), now, finished)
+        if self.active_count() == 0:
+            return finished
+
+        keys = np.zeros((self.num_slots, 2), np.uint32)
+        if self.temperature > 0.0:      # greedy path never reads the keys
+            for s, req in enumerate(self.slot_req):
+                if req is not None:
+                    req.key, sub = jax.random.split(req.key)
+                    keys[s] = np.asarray(sub)
+        toks, self.caches = self._decode(
+            self.params, jnp.asarray(self.tok_buf),
+            jnp.asarray(self.pos_buf), jnp.asarray(keys), self.caches)
+        self.stats["decode_steps"] += 1
+        toks = np.asarray(toks)
+        now = self._clock()
+        for s, req in enumerate(self.slot_req):
+            if req is None:                      # inactive slot: token ignored
+                continue
+            t = int(toks[s])
+            req.generated.append(t)
+            self.stats["tokens_generated"] += 1
+            if len(req.generated) >= req.max_new_tokens or t == req.eos_id:
+                self._finish(s, req, now, finished)
+            else:
+                self.tok_buf[s, 0] = t
+                self.pos_buf[s, 0] += 1
+        return finished
+
+    def run(self, requests: Sequence[Request]) -> List[Request]:
+        """Serve a trace to completion.  Resets the engine clock to 0, so
+        `arrival_time` fields are relative to the start of this call."""
+        self._t0 = time.perf_counter()
+        for req in sorted(requests, key=lambda r: r.arrival_time):
+            self.submit(req)
+        finished: List[Request] = []
+        while self.queue or self.active_count():
+            now = self._clock()
+            if self.active_count() == 0 and not self.queue.has_ready(now):
+                nxt = self.queue.next_arrival()
+                time.sleep(min(1e-3, max(0.0, nxt - now)))
+                continue
+            finished.extend(self.step(now))
+        return finished

@@ -1,0 +1,39 @@
+"""Fixed-capacity slot allocator for the continuous-batching KV cache.
+
+A slot is one row of the engine's (num_slots, cache_len) KV cache.  Requests
+borrow a slot for their whole lifetime (prefill through last decode step) and
+return it on completion; the allocator is a plain free list — lowest id
+first, so cache rows are reused densely.
+"""
+
+from __future__ import annotations
+
+import heapq
+from typing import List
+
+
+class SlotAllocator:
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("need at least one slot")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots))
+        heapq.heapify(self._free)
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise RuntimeError("no free slots")
+        return heapq.heappop(self._free)
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.num_slots:
+            raise ValueError(f"slot {slot} out of range")
+        if slot in self._free:
+            raise ValueError(f"slot {slot} already free")
+        heapq.heappush(self._free, slot)
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def in_use(self) -> int:
+        return self.num_slots - len(self._free)

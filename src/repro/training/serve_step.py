@@ -13,9 +13,17 @@ from repro.models.transformer import (NO_HINTS, ShardingHints, encode,
 
 
 def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
-            cache_len: int, frames=None, patches=None,
+            cache_len: int, lengths=None, frames=None, patches=None,
             hints: ShardingHints = NO_HINTS):
-    """Process the prompt, fill caches. Returns (last_logits, caches, memory)."""
+    """Process the prompt, fill caches. Returns (last_logits, caches, memory).
+
+    lengths: (B,) true prompt lengths for a LEFT-padded mixed batch.  Without
+    it, every token (pads included) is attended and positions assume no
+    padding — only correct for unpadded batches.  With it, pads are masked
+    out of attention and the KV cache, and the returned last-position logits
+    are each row's true final-token logits (left-padding puts the final token
+    at index -1).  Subsequent decode positions must start at `lengths[b]`.
+    """
     b, s = tokens.shape
     caches = init_caches(cfg, b, cache_len)
     memory = None
@@ -23,7 +31,7 @@ def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
         memory, _ = encode(params, cfg, frames, hints)
     logits, caches, _ = forward(params, cfg, tokens, caches=caches,
                                 patches=patches, memory=memory, hints=hints,
-                                last_only=True)
+                                last_only=True, lengths=lengths)
     return logits[:, -1], caches, memory
 
 
@@ -46,6 +54,21 @@ def sample(logits: jnp.ndarray, key, temperature: float = 0.0,
         vals, _ = jax.lax.top_k(lf, top_k)
         lf = jnp.where(lf < vals[..., -1:], -1e30, lf)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def sample_per_slot(logits: jnp.ndarray, keys: jnp.ndarray,
+                    temperature: float = 0.0, top_k: int = 0) -> jnp.ndarray:
+    """logits (B, V), keys (B, 2): one independent PRNG key per row.
+
+    Continuous-batching slots each belong to a different request, so rows
+    must not share a key (and a request's key stream must not restart when
+    its slot-mates change).
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.vmap(
+        lambda lg, k: sample(lg[None], k, temperature, top_k)[0]
+    )(logits, keys)
 
 
 def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, *,

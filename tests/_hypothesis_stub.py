@@ -1,0 +1,145 @@
+"""Fallback for ``hypothesis`` when it is not installed.
+
+conftest.py installs this module into ``sys.modules`` as ``hypothesis`` /
+``hypothesis.strategies`` so that property-test modules collect and run
+everywhere.  Instead of shrinking random search, each ``@given`` test runs a
+small deterministic set of examples: the strategy minimum first, then the
+maximum, then pseudo-random draws seeded from the test name (stable across
+runs).  ``max_examples`` is honoured but capped so the tier-1 lane stays fast.
+"""
+
+from __future__ import annotations
+
+import inspect
+import zlib
+from typing import Any, List, Sequence
+
+import numpy as np
+
+MAX_EXAMPLES_CAP = 25
+_DEFAULT_EXAMPLES = 10
+
+
+class Strategy:
+    def example(self, rng: np.random.Generator, edge: str = "") -> Any:
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def example(self, rng, edge=""):
+        if edge == "min":
+            return self.lo
+        if edge == "max":
+            return self.hi
+        return int(rng.integers(self.lo, self.hi + 1))
+
+
+class _Floats(Strategy):
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def example(self, rng, edge=""):
+        if edge == "min":
+            return self.lo
+        if edge == "max":
+            return self.hi
+        return float(rng.uniform(self.lo, self.hi))
+
+
+class _Lists(Strategy):
+    def __init__(self, elem: Strategy, min_size: int = 0, max_size: int = 10):
+        self.elem, self.min_size, self.max_size = elem, min_size, max_size
+
+    def example(self, rng, edge=""):
+        if edge == "min":
+            n = self.min_size
+        elif edge == "max":
+            n = self.max_size
+        else:
+            n = int(rng.integers(self.min_size, self.max_size + 1))
+        return [self.elem.example(rng) for _ in range(n)]
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, seq: Sequence[Any]):
+        self.seq = list(seq)
+
+    def example(self, rng, edge=""):
+        if edge == "min":
+            return self.seq[0]
+        if edge == "max":
+            return self.seq[-1]
+        return self.seq[int(rng.integers(len(self.seq)))]
+
+
+class _Booleans(Strategy):
+    def example(self, rng, edge=""):
+        if edge == "min":
+            return False
+        if edge == "max":
+            return True
+        return bool(rng.integers(2))
+
+
+def integers(min_value: int, max_value: int) -> Strategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float, max_value: float, **_: Any) -> Strategy:
+    return _Floats(min_value, max_value)
+
+
+def lists(elements: Strategy, *, min_size: int = 0,
+          max_size: int = 10) -> Strategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def sampled_from(elements: Sequence[Any]) -> Strategy:
+    return _SampledFrom(elements)
+
+
+def booleans() -> Strategy:
+    return _Booleans()
+
+
+def given(*args: Any, **strategies: Strategy):
+    if args:
+        raise TypeError("stub @given supports keyword strategies only")
+
+    def deco(fn):
+        fixture_names: List[str] = [
+            p for p in inspect.signature(fn).parameters if p not in strategies]
+
+        def run(**fixtures):
+            n = getattr(run, "_stub_max_examples", _DEFAULT_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.adler32(fn.__qualname__.encode()))
+            for i in range(n):
+                edge = "min" if i == 0 else ("max" if i == 1 else "")
+                drawn = {k: s.example(rng, edge)
+                         for k, s in strategies.items()}
+                fn(**fixtures, **drawn)
+
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run.__module__ = fn.__module__
+        # pytest must see only the fixture params (no __wrapped__: pytest
+        # follows it and would demand fixtures for the strategy args)
+        run.__signature__ = inspect.Signature(
+            [inspect.Parameter(p, inspect.Parameter.POSITIONAL_OR_KEYWORD)
+             for p in fixture_names])
+        return run
+
+    return deco
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline: Any = None,
+             **_: Any):
+    def deco(fn):
+        fn._stub_max_examples = min(int(max_examples), MAX_EXAMPLES_CAP)
+        return fn
+
+    return deco

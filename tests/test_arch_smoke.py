@@ -28,7 +28,14 @@ def _batch(cfg, key, b=2, s=32):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# heavy smoke archs (recurrent scans / MoE dispatch / encoder stacks) run in
+# the slow lane; tier-1 keeps one representative per family
+_HEAVY = {"hymba-1.5b", "rwkv6-3b", "whisper-tiny", "deepseek-moe-16b"}
+ARCH_PARAMS = [pytest.param(a, marks=pytest.mark.slow) if a in _HEAVY else a
+               for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_forward_smoke(arch):
     cfg = get_config(arch, smoke=True)
     key = jax.random.PRNGKey(0)
@@ -42,7 +49,7 @@ def test_forward_smoke(arch):
     assert np.isfinite(float(aux))
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_train_step_smoke(arch):
     cfg = get_config(arch, smoke=True)
     key = jax.random.PRNGKey(1)
@@ -61,8 +68,11 @@ def test_train_step_smoke(arch):
     assert max(jax.tree.leaves(moved)) > 0
 
 
-@pytest.mark.parametrize("arch", ["granite-3-8b", "rwkv6-3b", "hymba-1.5b",
-                                  "whisper-tiny", "deepseek-moe-16b"])
+@pytest.mark.parametrize(
+    "arch", ["granite-3-8b"] + [pytest.param(a, marks=pytest.mark.slow)
+                                for a in ("rwkv6-3b", "hymba-1.5b",
+                                          "whisper-tiny",
+                                          "deepseek-moe-16b")])
 def test_loss_decreases_overfit(arch):
     """A few steps on one repeated batch must reduce the loss."""
     cfg = get_config(arch, smoke=True)

@@ -22,8 +22,10 @@ SMALL_TRAIN = ShapeConfig("train_small", 64, 4, "train")
 SMALL_DECODE = ShapeConfig("decode_small", 64, 4, "decode")
 
 
-@pytest.mark.parametrize("arch", ["stablelm-1.6b", "rwkv6-3b",
-                                  "deepseek-moe-16b"])
+@pytest.mark.parametrize(
+    "arch", ["stablelm-1.6b",
+             pytest.param("rwkv6-3b", marks=pytest.mark.slow),
+             pytest.param("deepseek-moe-16b", marks=pytest.mark.slow)])
 @pytest.mark.parametrize("shape", [SMALL_TRAIN, SMALL_DECODE])
 def test_cell_lowers_compiles_and_analyzes(arch, shape):
     cfg = get_config(arch, smoke=True)

@@ -38,6 +38,7 @@ def test_zero1_matches_baseline_loss():
     assert abs(losses["base"] - losses["zero1"]) < 1e-2
 
 
+@pytest.mark.slow
 def test_moe_stopgrad_matches_baseline_loss_and_router_grads():
     cfg0 = get_config("deepseek-moe-16b", smoke=True)
     key = jax.random.PRNGKey(1)

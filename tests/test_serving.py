@@ -10,9 +10,11 @@ from repro.models import transformer as T
 from repro.training import serve_step as SS
 
 
-@pytest.mark.parametrize("arch", ["granite-3-8b", "starcoder2-3b",
-                                  "rwkv6-3b", "hymba-1.5b",
-                                  "deepseek-moe-16b", "whisper-tiny"])
+@pytest.mark.parametrize(
+    "arch", ["granite-3-8b", "starcoder2-3b"]
+    + [pytest.param(a, marks=pytest.mark.slow)
+       for a in ("rwkv6-3b", "hymba-1.5b", "deepseek-moe-16b",
+                 "whisper-tiny")])
 def test_decode_matches_prefill(arch):
     cfg = get_config(arch, smoke=True)
     key = jax.random.PRNGKey(0)
