@@ -2,11 +2,20 @@
 
 from repro.core.portable import (  # noqa: F401
     Backend,
+    BackendUnavailableError,
     KernelRegistry,
     PortableKernel,
+    TunableSpace,
     get_kernel,
     register_kernel,
     registry,
+)
+from repro.core.tuning import (  # noqa: F401
+    TuningCache,
+    TuningKey,
+    TuningResult,
+    cached_best_params,
+    tune,
 )
 from repro.core.metrics import (  # noqa: F401
     Efficiency,

@@ -13,30 +13,49 @@ against each target's "vendor" baseline.  Here:
                              specialized, the "Mojo" analogue),
       - ``pallas_interpret`` the same Pallas kernel body interpreted on CPU
                              (correctness validation path used by CI);
+  * backends declare *availability* (pallas-TPU only runs on TPU) and are
+    skipped — never crashed into — when unavailable
+    (``BackendUnavailableError`` carries the reason);
+  * backends declare a *tunable space* (block/tile sizes); the autotuner in
+    ``repro.core.tuning`` sweeps it deterministically and persists the best
+    point per (kernel, backend, shape, dtype, platform), so Eq.-4 efficiency
+    is always measured at each backend's best configuration — untuned
+    portable kernels understate the metric (Godoy et al., 2023);
   * the registry can *validate* any backend against the oracle and *time* all
     backends to feed the performance-portability metric (paper Eq. 4).
 
 Framework layers (attention, RWKV, MoE dispatch, science kernels) register
-here so deployments choose backends by name and CI sweeps them uniformly.
+here so deployments choose backends by name and CI sweeps them uniformly;
+``benchmarks/portability.py`` walks this registry to produce the tuned Eq.-4
+table.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from typing import Any, Callable, Dict, Mapping, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
 
 import jax
 import numpy as np
 
 __all__ = [
     "Backend",
+    "BackendUnavailableError",
+    "TunableSpace",
     "PortableKernel",
     "KernelRegistry",
     "registry",
     "register_kernel",
     "get_kernel",
+    "on_tpu",
 ]
+
+
+class BackendUnavailableError(RuntimeError):
+    """A backend exists in the registry but cannot run on this host."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,8 +68,41 @@ class Backend:
     # (pallas-TPU kernels only run on TPU; interpret/xla run anywhere).
     available: Callable[[], bool] = lambda: True
 
+    def is_available(self) -> bool:
+        try:
+            return bool(self.available())
+        except Exception:
+            return False
+
     def __call__(self, *args: Any, **kwargs: Any) -> Any:
         return self.fn(*args, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class TunableSpace:
+    """Declared tunable parameters of one backend.
+
+    ``params`` maps parameter name -> candidate values (declaration order is
+    the deterministic sweep order).  ``constraint(point, *args, **kwargs)``
+    filters points that are invalid for the concrete inputs (e.g. a block
+    size that does not divide the array extent).
+    """
+
+    params: Mapping[str, Tuple[Any, ...]]
+    constraint: Optional[Callable[..., bool]] = None
+
+    def points(self) -> Iterator[Dict[str, Any]]:
+        """Deterministic cartesian product over the declared grid."""
+        names = list(self.params)
+        for values in itertools.product(*(self.params[n] for n in names)):
+            yield dict(zip(names, values))
+
+    def valid_points(self, *args: Any, **kwargs: Any) -> List[Dict[str, Any]]:
+        pts = []
+        for p in self.points():
+            if self.constraint is None or self.constraint(p, *args, **kwargs):
+                pts.append(p)
+        return pts
 
 
 @dataclasses.dataclass
@@ -68,11 +120,32 @@ class PortableKernel:
     flops_model: Optional[Callable[..., float]] = None
     bytes_model: Optional[Callable[..., float]] = None
     doc: str = ""
+    tunables: Dict[str, TunableSpace] = dataclasses.field(default_factory=dict)
 
     # ---- registration -------------------------------------------------
     def add_backend(self, name: str, fn: Callable[..., Any],
                     available: Callable[[], bool] = lambda: True) -> None:
         self.backends[name] = Backend(name=name, fn=fn, available=available)
+
+    def declare_tunables(
+            self, backends: Union[str, Sequence[str]], *,
+            constraint: Optional[Callable[..., bool]] = None,
+            **params: Sequence[Any]) -> None:
+        """Declare the tunable grid for one or more backends.
+
+        ``declare_tunables(("pallas", "pallas_interpret"), by=(8, 16, 32))``
+        registers the same space under both names (the interpret backend is
+        the same kernel body, so it shares the space).
+        """
+        space = TunableSpace(
+            params={k: tuple(v) for k, v in params.items()},
+            constraint=constraint)
+        names = [backends] if isinstance(backends, str) else list(backends)
+        for n in names:
+            self.tunables[n] = space
+
+    def tunable_space(self, backend: str) -> Optional[TunableSpace]:
+        return self.tunables.get(backend)
 
     def backend(self, name: Optional[str] = None) -> Backend:
         if name is None:
@@ -83,22 +156,71 @@ class PortableKernel:
                 f"have {sorted(self.backends)}")
         return self.backends[name]
 
+    def available_backends(self) -> List[str]:
+        return [n for n in sorted(self.backends)
+                if self.backends[n].is_available()]
+
     def default_backend(self) -> str:
-        """Pallas on TPU, oracle elsewhere — the paper's portability story."""
-        if "pallas" in self.backends and _on_tpu():
+        """Pallas on TPU, oracle elsewhere — the paper's portability story.
+
+        Honors ``Backend.available``: an unavailable pallas backend falls
+        back to the oracle, an unavailable oracle falls back to any
+        available backend, and only when *nothing* can run do we raise
+        ``BackendUnavailableError`` (never a crash inside the backend).
+        """
+        pallas = self.backends.get("pallas")
+        if pallas is not None and _on_tpu() and pallas.is_available():
             return "pallas"
-        return self.oracle
+        oracle = self.backends.get(self.oracle)
+        if oracle is None:
+            # spec-only kernel (no backends registered yet): keep returning
+            # the declared oracle name so callers get the usual KeyError.
+            return self.oracle
+        if oracle.is_available():
+            return self.oracle
+        for n in self.available_backends():
+            return n
+        raise BackendUnavailableError(
+            f"kernel {self.name!r}: no backend available on this host "
+            f"(registered: {sorted(self.backends)})")
+
+    def _require_available(self, name: str) -> Backend:
+        b = self.backend(name)
+        if not b.is_available():
+            raise BackendUnavailableError(
+                f"kernel {self.name!r} backend {name!r} is not available on "
+                f"this host (available: {self.available_backends()})")
+        return b
 
     def __call__(self, *args: Any, backend: Optional[str] = None,
+                 tuned: bool = False, tuning_cache: Any = None,
                  **kwargs: Any) -> Any:
-        return self.backend(backend)(*args, **kwargs)
+        """Run the kernel.
+
+        With ``tuned=True`` the persistent tuning cache (see
+        ``repro.core.tuning``) is consulted for the best block/tile sizes
+        recorded for this (kernel, backend, shape, dtype, platform); cached
+        parameters are merged *under* explicit kwargs, and a cache miss
+        silently runs the declared defaults.
+        """
+        name = backend if backend is not None else self.default_backend()
+        if tuned:
+            from repro.core import tuning as _tuning
+            best = _tuning.cached_best_params(
+                self, *args, backend=name, cache=tuning_cache, **kwargs)
+            kwargs = {**best, **kwargs}
+        return self.backend(name)(*args, **kwargs)
 
     # ---- validation ----------------------------------------------------
     def validate(self, *args: Any, backend: str, rtol: float = 1e-5,
                  atol: float = 1e-5, **kwargs: Any) -> None:
-        """assert_allclose the given backend against the oracle."""
-        want = self.backend(self.oracle)(*args, **kwargs)
-        got = self.backend(backend)(*args, **kwargs)
+        """assert_allclose the given backend against the oracle.
+
+        Raises ``BackendUnavailableError`` (not an opaque crash from inside
+        the kernel) when either side cannot run here.
+        """
+        want = self._require_available(self.oracle)(*args, **kwargs)
+        got = self._require_available(backend)(*args, **kwargs)
         jax.tree.map(
             lambda w, g: np.testing.assert_allclose(
                 np.asarray(g, dtype=np.float64),
@@ -111,9 +233,12 @@ class PortableKernel:
         """Median wall-clock seconds per call (post-warmup, paper §3).
 
         The paper discards the first (JIT) step and reports medians over many
-        runs; we do the same.
+        runs; we do the same.  ``warmup=0`` is allowed (the timed loop then
+        includes compilation in its first sample — the median still drops it
+        for ``iters >= 3``).
         """
-        fn = self.backend(backend)
+        fn = self._require_available(backend)
+        out = None
         for _ in range(warmup):
             out = fn(*args, **kwargs)
         jax.block_until_ready(out)
@@ -143,6 +268,11 @@ def _on_tpu() -> bool:
         return False
 
 
+#: availability predicate for compiled pallas-TPU backends (public so
+#: kernel ops modules can pass ``available=on_tpu`` at registration).
+on_tpu = _on_tpu
+
+
 class KernelRegistry:
     """Global name → PortableKernel map (the framework's kernel catalogue)."""
 
@@ -156,7 +286,12 @@ class KernelRegistry:
         return kernel
 
     def get(self, name: str) -> PortableKernel:
-        return self._kernels[name]
+        try:
+            return self._kernels[name]
+        except KeyError:
+            raise KeyError(
+                f"no kernel {name!r} registered; "
+                f"registered kernels: {self.names()}") from None
 
     def __contains__(self, name: str) -> bool:
         return name in self._kernels

@@ -1,0 +1,309 @@
+"""Registry-driven autotuning for PortableKernel backends.
+
+Kokkos/Julia-style portability evaluations (Godoy et al., 2023) and the
+Mojo paper's own methodology both time each kernel at its *best* tunable
+configuration before computing Eq.-4 efficiencies — an untuned portable
+kernel understates the metric.  This module supplies that measurement
+spine:
+
+  * each backend declares its tunable grid via
+    ``PortableKernel.declare_tunables`` (block/tile sizes plus a
+    divisibility constraint over the concrete inputs);
+  * ``tune()`` walks the grid *deterministically* (declaration order),
+    timing every valid point through ``PortableKernel.time_backend`` and
+    picking the fastest (ties break toward the earlier point);
+  * results persist in a JSON :class:`TuningCache` keyed by
+    ``(kernel, backend, shape-signature, dtype, platform)`` so repeat runs
+    — and ``PortableKernel.__call__(tuned=True)`` at serving time — skip
+    the re-search entirely;
+  * unavailable backends are *skipped with a reason*
+    (``TuningResult.skipped``), never crashed into, so a CPU host can sweep
+    a catalogue that also contains TPU-only backends.
+
+Cache location: ``$REPRO_TUNING_CACHE`` if set, else
+``~/.cache/repro/tuning.json``.  The file maps the key string to
+``{"params": {...}, "seconds": float}`` and is rewritten atomically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core.portable import (BackendUnavailableError, PortableKernel,
+                                 registry)
+
+__all__ = [
+    "TuningKey",
+    "TuningCache",
+    "TuningResult",
+    "make_key",
+    "shape_signature",
+    "tune",
+    "cached_best_params",
+    "default_cache_path",
+]
+
+CACHE_ENV = "REPRO_TUNING_CACHE"
+
+
+# --------------------------------------------------------------------------
+# keys
+# --------------------------------------------------------------------------
+def _sig_one(x: Any) -> str:
+    shape = getattr(x, "shape", None)
+    dtype = getattr(x, "dtype", None)
+    if shape is not None and dtype is not None:
+        return f"{dtype}[{','.join(str(d) for d in shape)}]"
+    return repr(x)
+
+
+def shape_signature(*args: Any, **kwargs: Any) -> str:
+    """Deterministic signature of the concrete call: dtypes+shapes of array
+    arguments, ``repr`` of scalars, kwargs sorted by name."""
+    parts = [_sig_one(a) for a in args]
+    parts += [f"{k}={_sig_one(v)}" for k, v in sorted(kwargs.items())]
+    return ";".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningKey:
+    """Cache key: a tuned configuration is only valid for the exact problem
+    shape/dtype on the platform it was measured on."""
+
+    kernel: str
+    backend: str
+    shape: str
+    dtype: str
+    platform: str
+
+    def as_str(self) -> str:
+        return "|".join((self.kernel, self.backend, self.shape, self.dtype,
+                         self.platform))
+
+
+def _platform() -> str:
+    try:
+        return jax.devices()[0].platform
+    except Exception:  # pragma: no cover - no jax backend at all
+        return "unknown"
+
+
+def make_key(kernel: PortableKernel, *args: Any, backend: str,
+             **kwargs: Any) -> TuningKey:
+    dtypes = [str(a.dtype) for a in args if hasattr(a, "dtype")]
+    return TuningKey(
+        kernel=kernel.name,
+        backend=backend,
+        shape=shape_signature(*args, **kwargs),
+        dtype=dtypes[0] if dtypes else "-",
+        platform=_platform(),
+    )
+
+
+# --------------------------------------------------------------------------
+# persistent cache
+# --------------------------------------------------------------------------
+def default_cache_path() -> Path:
+    env = os.environ.get(CACHE_ENV)
+    if env:
+        return Path(env)
+    return Path.home() / ".cache" / "repro" / "tuning.json"
+
+
+class TuningCache:
+    """Persistent JSON map ``key-string -> {"params", "seconds"}``.
+
+    Writes are atomic (tmp file + rename) so concurrent runs cannot leave a
+    torn file behind, and each ``put`` merges the on-disk state back in
+    first, so two processes tuning different kernels keep each other's
+    entries (the race on one *identical* key is last-writer-wins, which is
+    fine — both wrote a valid measurement).  Cached ``seconds`` are
+    historical: they skip the re-search, but anything computing a ratio
+    against a fresh timing must re-time at the cached params
+    (``benchmarks/portability.py`` does).
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None) -> None:
+        self.path = Path(path) if path is not None else default_cache_path()
+        self._data: Optional[Dict[str, Dict[str, Any]]] = None
+
+    def _load(self) -> Dict[str, Dict[str, Any]]:
+        if self._data is None:
+            try:
+                self._data = json.loads(self.path.read_text())
+            except (OSError, ValueError):
+                self._data = {}
+        return self._data
+
+    def get(self, key: TuningKey) -> Optional[Dict[str, Any]]:
+        return self._load().get(key.as_str())
+
+    def put(self, key: TuningKey, params: Dict[str, Any],
+            seconds: float) -> None:
+        data = self._load()
+        try:
+            on_disk = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            on_disk = {}
+        for k, v in on_disk.items():
+            data.setdefault(k, v)
+        data[key.as_str()] = {"params": dict(params),
+                              "seconds": float(seconds)}
+        self._save(data)
+
+    def _save(self, data: Dict[str, Dict[str, Any]]) -> None:
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                   prefix=self.path.name, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+    def __len__(self) -> int:
+        return len(self._load())
+
+
+# --------------------------------------------------------------------------
+# the sweep
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class TuningResult:
+    """Outcome of one ``tune()`` call."""
+
+    kernel: str
+    backend: str
+    params: Dict[str, Any]            # best point ({} = declared defaults)
+    seconds: float                    # best median seconds per call
+    swept: List[Tuple[Dict[str, Any], float]]  # every timed (point, seconds)
+    cached: bool                      # True = served from the cache, no timing
+    skipped: Optional[str] = None     # reason this backend was not tuned
+
+
+def tune(kernel: PortableKernel, *args: Any, backend: str,
+         cache: Optional[TuningCache] = None, iters: int = 3,
+         warmup: int = 1, max_points: Optional[int] = None,
+         **kwargs: Any) -> TuningResult:
+    """Find (or recall) the best tunable point for one backend + inputs.
+
+    Deterministic: the grid is walked in declaration order and ties break
+    toward the earlier point, so two runs on the same host pick the same
+    configuration.  A cache hit skips all timing.  An unavailable backend
+    or a backend with an empty valid grid returns ``skipped=<reason>``
+    with the declared defaults instead of raising.
+    """
+    b = kernel.backends.get(backend)
+    if b is None:
+        raise KeyError(
+            f"kernel {kernel.name!r} has no backend {backend!r}; "
+            f"have {sorted(kernel.backends)}")
+    if not b.is_available():
+        return TuningResult(
+            kernel=kernel.name, backend=backend, params={},
+            seconds=float("inf"), swept=[], cached=False,
+            skipped=f"backend {backend!r} unavailable on platform "
+                    f"{_platform()!r}")
+
+    key = make_key(kernel, *args, backend=backend, **kwargs)
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            return TuningResult(
+                kernel=kernel.name, backend=backend,
+                params=dict(hit["params"]), seconds=float(hit["seconds"]),
+                swept=[], cached=True)
+
+    space = kernel.tunable_space(backend)
+    if space is None:
+        # not cached: a cache hit would flip skipped/swept on repeat runs,
+        # and there is no search to skip anyway
+        secs = kernel.time_backend(*args, backend=backend, iters=iters,
+                                   warmup=warmup, **kwargs)
+        return TuningResult(kernel=kernel.name, backend=backend, params={},
+                            seconds=secs, swept=[({}, secs)], cached=False,
+                            skipped="no tunable space declared")
+
+    points = space.valid_points(*args, **kwargs)
+    truncated = max_points is not None and len(points) > max_points
+    if truncated:
+        points = points[:max_points]
+    if not points:
+        return TuningResult(
+            kernel=kernel.name, backend=backend, params={},
+            seconds=float("inf"), swept=[], cached=False,
+            skipped="no valid tunable point for these inputs")
+
+    swept: List[Tuple[Dict[str, Any], float]] = []
+    best_params: Optional[Dict[str, Any]] = None
+    best_secs = float("inf")
+    for point in points:
+        try:
+            secs = kernel.time_backend(*args, backend=backend, iters=iters,
+                                       warmup=warmup, **point, **kwargs)
+        except (ValueError, TypeError):
+            # a point the constraint failed to exclude — record and move on
+            swept.append((point, float("inf")))
+            continue
+        swept.append((point, secs))
+        if secs < best_secs:
+            best_secs, best_params = secs, point
+
+    if best_params is None:
+        return TuningResult(
+            kernel=kernel.name, backend=backend, params={},
+            seconds=float("inf"), swept=swept, cached=False,
+            skipped="every tunable point failed to run")
+
+    result = TuningResult(kernel=kernel.name, backend=backend,
+                          params=best_params, seconds=best_secs, swept=swept,
+                          cached=False)
+    # a truncated sweep (smoke lane) must not poison the cache: its key is
+    # identical to the full run's, which would then inherit the partial
+    # search as if it were the tuned optimum
+    if cache is not None and not truncated:
+        cache.put(key, result.params, result.seconds)
+    return result
+
+
+_DEFAULT_CACHES: Dict[Path, TuningCache] = {}
+
+
+def _default_cache() -> TuningCache:
+    """Shared per-path default cache so hot callers (``tuned=True`` in a
+    serving loop) parse the JSON file once, not per call."""
+    path = default_cache_path()
+    c = _DEFAULT_CACHES.get(path)
+    if c is None:
+        c = _DEFAULT_CACHES[path] = TuningCache(path)
+    return c
+
+
+def cached_best_params(kernel: PortableKernel, *args: Any, backend: str,
+                       cache: Optional[TuningCache] = None,
+                       **kwargs: Any) -> Dict[str, Any]:
+    """Cache-lookup-only path used by ``PortableKernel.__call__(tuned=True)``:
+    returns the recorded best params for this exact problem, or ``{}``
+    (declared defaults) on a miss.  Never times anything."""
+    if cache is None:
+        cache = _default_cache()
+    hit = cache.get(make_key(kernel, *args, backend=backend, **kwargs))
+    return dict(hit["params"]) if hit else {}
+
+
+def tune_registered(name: str, *args: Any, backend: str,
+                    **kwargs: Any) -> TuningResult:
+    """Convenience: ``tune()`` against the global registry by kernel name."""
+    return tune(registry.get(name), *args, backend=backend, **kwargs)

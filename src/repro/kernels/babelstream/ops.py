@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.portable import register_kernel
+from repro.core.portable import on_tpu, register_kernel
 from repro.core.metrics import babelstream_bytes
 from repro.kernels.babelstream import kernel as K
 from repro.kernels.babelstream import ref
@@ -79,13 +79,21 @@ _JIT_REF = {name: jax.jit(getattr(ref, name))
 _PALLAS = {"copy": copy_pallas, "mul": mul_pallas, "add": add_pallas,
            "triad": triad_pallas, "dot": dot_pallas}
 
+def _block_rows_ok(p, *arrays, **kw):
+    # the 1-D grid requires n to tile into (block_rows, LANES) blocks exactly
+    return arrays[0].size % (p["block_rows"] * LANES) == 0
+
+
 for _op in ("copy", "mul", "add", "triad", "dot"):
     _k = register_kernel(
         f"babelstream.{_op}",
         bytes_model=_bytes_model_factory(_op),
         doc=f"BabelStream {_op} (paper Eq. 2 FoM)")
     _k.add_backend("xla", _JIT_REF[_op])
-    _k.add_backend("pallas", _PALLAS[_op])
+    _k.add_backend("pallas", _PALLAS[_op], available=on_tpu)
     _k.add_backend(
         "pallas_interpret",
         functools.partial(_PALLAS[_op], interpret=True))
+    _k.declare_tunables(("pallas", "pallas_interpret"),
+                        block_rows=(128, 256, 512, 1024),
+                        constraint=_block_rows_ok)

@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.portable import register_kernel
+from repro.core.portable import on_tpu, register_kernel
 from repro.kernels.flash_attention import kernel as K
 from repro.kernels.flash_attention.ref import flash_ref
 
@@ -34,6 +34,13 @@ _k = register_kernel("attention.flash", flops_model=_flops_model,
                      doc="flash attention (causal/windowed GQA), "
                          "online-softmax Pallas kernel")
 _k.add_backend("xla", flash_xla)
-_k.add_backend("pallas", flash_pallas)
+_k.add_backend("pallas", flash_pallas, available=on_tpu)
 _k.add_backend("pallas_interpret",
                functools.partial(flash_pallas, interpret=True))
+# q/k block sizes of the online-softmax loop — must divide S and T
+_k.declare_tunables(
+    ("pallas", "pallas_interpret"),
+    bq=(64, 128, 256, 512),
+    bk=(64, 128, 256, 512),
+    constraint=lambda p, q, k, v, **kw:
+        q.shape[2] % p["bq"] == 0 and k.shape[2] % p["bk"] == 0)

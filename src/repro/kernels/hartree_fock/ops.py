@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.portable import register_kernel
+from repro.core.portable import on_tpu, register_kernel
 from repro.core.metrics import hartree_fock_quartets
 from repro.kernels.hartree_fock import kernel as K
 from repro.kernels.hartree_fock import ref
@@ -42,6 +42,12 @@ _k = register_kernel("hartree_fock.twoel", flops_model=_flops_model,
                      doc="HF two-electron Fock build (wall-clock FoM; "
                          "gather reformulation of the paper's atomics)")
 _k.add_backend("xla", fock_xla)
-_k.add_backend("pallas", fock_pallas)
+_k.add_backend("pallas", fock_pallas, available=on_tpu)
 _k.add_backend("pallas_interpret",
                functools.partial(fock_pallas, interpret=True))
+# Fock rows per grid step (sublane height) — must divide natoms
+_k.declare_tunables(
+    ("pallas", "pallas_interpret"),
+    i_tile=(4, 8, 16),
+    constraint=lambda p, positions, *a, **kw:
+        positions.shape[0] % p["i_tile"] == 0)

@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.portable import register_kernel
+from repro.core.portable import on_tpu, register_kernel
 from repro.core.metrics import minibude_ops
 from repro.kernels.minibude import kernel as K
 from repro.kernels.minibude import ref
@@ -68,6 +68,11 @@ def _flops_model(protein_pos, protein_par, ligand_pos, ligand_par, poses,
 _k = register_kernel("minibude.fasten", flops_model=_flops_model,
                      doc="miniBUDE fasten energy kernel (paper Eq. 3 FoM)")
 _k.add_backend("xla", fasten_xla)
-_k.add_backend("pallas", fasten_pallas)
+_k.add_backend("pallas", fasten_pallas, available=on_tpu)
 _k.add_backend("pallas_interpret",
                functools.partial(fasten_pallas, interpret=True))
+# PPWI analogue: poses per grid step (lane tile) — must divide nposes
+_k.declare_tunables(
+    ("pallas", "pallas_interpret"),
+    pose_tile=(64, 128, 256),
+    constraint=lambda p, *deck, **kw: deck[4].shape[1] % p["pose_tile"] == 0)

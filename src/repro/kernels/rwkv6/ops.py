@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.portable import register_kernel
+from repro.core.portable import on_tpu, register_kernel
 from repro.kernels.rwkv6 import kernel as K
 from repro.kernels.rwkv6.ref import wkv_chunked, wkv_serial
 
@@ -36,6 +36,11 @@ def _flops_model(r, k, v, w_logdecay, u, chunk=K.DEFAULT_CHUNK, **kw):
 _k = register_kernel("rwkv6.wkv", flops_model=_flops_model,
                      doc="RWKV6 chunked WKV scan (data-dependent decay)")
 _k.add_backend("xla", wkv_xla)
-_k.add_backend("pallas", wkv_pallas)
+_k.add_backend("pallas", wkv_pallas, available=on_tpu)
 _k.add_backend("pallas_interpret",
                functools.partial(wkv_pallas, interpret=True))
+# intra-chunk parallel width of the chunked scan — must divide S
+_k.declare_tunables(
+    ("pallas", "pallas_interpret"),
+    chunk=(16, 32, 64),
+    constraint=lambda p, r, *a, **kw: r.shape[2] % p["chunk"] == 0)

@@ -7,7 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.portable import register_kernel
+from repro.core.portable import on_tpu, register_kernel
 from repro.core.metrics import stencil7_effective_bytes
 from repro.kernels.stencil7 import kernel as K
 from repro.kernels.stencil7 import ref
@@ -36,6 +36,12 @@ def _bytes_model(u, *args, **kw):
 _k = register_kernel("stencil7", bytes_model=_bytes_model,
                      doc="seven-point Laplacian stencil (paper Eq. 1 FoM)")
 _k.add_backend("xla", laplacian_xla)
-_k.add_backend("pallas", laplacian_pallas)
+_k.add_backend("pallas", laplacian_pallas, available=on_tpu)
 _k.add_backend("pallas_interpret",
                functools.partial(laplacian_pallas, interpret=True))
+# y-slab height: the VMEM working set is 6*by*nx*itemsize, so the grid must
+# tile ny exactly — the autotuner sweeps the heights that do.
+_k.declare_tunables(
+    ("pallas", "pallas_interpret"),
+    by=(8, 16, 32, 64),
+    constraint=lambda p, u, *a, **kw: u.shape[1] % p["by"] == 0)

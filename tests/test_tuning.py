@@ -1,0 +1,237 @@
+"""Autotuning subsystem: cache determinism, availability skip, warmup=0,
+and the registry-driven Eq.-4 sweep at smoke shapes."""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tuning
+from repro.core.portable import (BackendUnavailableError, KernelRegistry,
+                                 PortableKernel)
+
+
+def _toy_kernel(calls):
+    """A kernel whose 'fast' backend counts invocations (to prove cache hits
+    skip re-timing) and exposes a 3-point tunable grid."""
+    k = PortableKernel(name="toy")
+    k.add_backend("xla", lambda x: x * 2.0)
+
+    def fast(x, *, block=8):
+        calls["n"] += 1
+        return x + x
+
+    k.add_backend("fast", fast)
+    k.declare_tunables("fast", block=(4, 8, 16))
+    return k
+
+
+# --------------------------------------------------------------------------
+# satellite regressions
+# --------------------------------------------------------------------------
+def test_time_backend_warmup_zero_does_not_raise():
+    k = PortableKernel(name="w0")
+    k.add_backend("xla", lambda x: x + 1.0)
+    t = k.time_backend(jnp.ones(8), backend="xla", warmup=0, iters=3)
+    assert t > 0.0
+
+
+def test_unavailable_backend_is_skipped_not_crashed():
+    k = PortableKernel(name="avail")
+    k.add_backend("xla", lambda x: x * 2.0)
+    k.add_backend("pallas", lambda x: (_ for _ in ()).throw(
+        RuntimeError("must never run")), available=lambda: False)
+
+    # default selection never lands on the unavailable backend
+    assert k.default_backend() == "xla"
+    assert k.available_backends() == ["xla"]
+
+    # timing / validation refuse with the typed error, not a crash inside
+    with pytest.raises(BackendUnavailableError):
+        k.time_backend(jnp.ones(4), backend="pallas", iters=1, warmup=0)
+    with pytest.raises(BackendUnavailableError):
+        k.validate(jnp.ones(4), backend="pallas")
+
+    # the sweep records a reason instead of raising
+    r = tuning.tune(k, jnp.ones(4), backend="pallas")
+    assert r.skipped is not None and "unavailable" in r.skipped
+    assert r.swept == []
+
+
+def test_default_backend_falls_back_past_unavailable_oracle():
+    k = PortableKernel(name="noora")
+    k.add_backend("xla", lambda x: x, available=lambda: False)
+    k.add_backend("alt", lambda x: x)
+    assert k.default_backend() == "alt"
+    k2 = PortableKernel(name="nothing")
+    k2.add_backend("xla", lambda x: x, available=lambda: False)
+    with pytest.raises(BackendUnavailableError):
+        k2.default_backend()
+
+
+def test_registry_get_keyerror_lists_registered_names():
+    r = KernelRegistry()
+    r.register(PortableKernel(name="alpha"))
+    r.register(PortableKernel(name="beta"))
+    with pytest.raises(KeyError, match="alpha.*beta"):
+        r.get("nope")
+
+
+# --------------------------------------------------------------------------
+# tuning sweep + cache
+# --------------------------------------------------------------------------
+def test_tune_is_deterministic_and_cache_hit_skips_retiming(tmp_path):
+    calls = {"n": 0}
+    k = _toy_kernel(calls)
+    cache = tuning.TuningCache(path=tmp_path / "tuning.json")
+    x = jnp.ones(16)
+
+    r1 = tuning.tune(k, x, backend="fast", cache=cache, iters=2, warmup=1)
+    assert not r1.cached
+    assert r1.params["block"] in (4, 8, 16)
+    assert len(r1.swept) == 3
+    n_after_first = calls["n"]
+    assert n_after_first > 0
+
+    # same key -> served from cache, the backend is never invoked again
+    r2 = tuning.tune(k, x, backend="fast", cache=cache, iters=2, warmup=1)
+    assert r2.cached
+    assert r2.params == r1.params
+    assert r2.seconds == r1.seconds
+    assert calls["n"] == n_after_first
+
+    # a fresh cache object re-reads the persisted file (not process state)
+    r3 = tuning.tune(k, x, backend="fast",
+                     cache=tuning.TuningCache(path=tmp_path / "tuning.json"),
+                     iters=2, warmup=1)
+    assert r3.cached and r3.params == r1.params
+
+    # a different shape is a different key -> re-tunes
+    r4 = tuning.tune(k, jnp.ones(32), backend="fast", cache=cache, iters=2,
+                     warmup=1)
+    assert not r4.cached
+
+
+def test_truncated_sweep_never_poisons_the_cache(tmp_path):
+    """A smoke-lane sweep (max_points) shares its key with the full run and
+    must therefore not persist its partial search result."""
+    calls = {"n": 0}
+    k = _toy_kernel(calls)
+    cache = tuning.TuningCache(path=tmp_path / "tuning.json")
+    x = jnp.ones(16)
+
+    r1 = tuning.tune(k, x, backend="fast", cache=cache, iters=1, warmup=0,
+                     max_points=2)
+    assert not r1.cached and len(r1.swept) == 2
+    assert len(cache) == 0
+
+    # the full sweep then runs (no stale hit) and is the one that persists
+    r2 = tuning.tune(k, x, backend="fast", cache=cache, iters=1, warmup=0)
+    assert not r2.cached and len(r2.swept) == 3
+    assert len(cache) == 1
+
+
+def test_cache_put_merges_on_disk_entries(tmp_path):
+    """Two cache objects on the same file (concurrent processes) must not
+    erase each other's entries on write."""
+    k = _toy_kernel({"n": 0})
+    path = tmp_path / "tuning.json"
+    a, b = tuning.TuningCache(path=path), tuning.TuningCache(path=path)
+    key_a = tuning.make_key(k, jnp.ones(16), backend="fast")
+    key_b = tuning.make_key(k, jnp.ones(32), backend="fast")
+    a.get(key_a)  # force both to load the (empty) file now
+    b.get(key_b)
+    a.put(key_a, {"block": 4}, 1e-6)
+    b.put(key_b, {"block": 8}, 2e-6)
+    fresh = tuning.TuningCache(path=path)
+    assert fresh.get(key_a) == {"params": {"block": 4}, "seconds": 1e-6}
+    assert fresh.get(key_b) == {"params": {"block": 8}, "seconds": 2e-6}
+
+
+def test_tuning_key_separates_shape_dtype_backend():
+    k = _toy_kernel({"n": 0})
+    k1 = tuning.make_key(k, jnp.ones(16), backend="fast")
+    k2 = tuning.make_key(k, jnp.ones(32), backend="fast")
+    k3 = tuning.make_key(k, jnp.ones(16, jnp.bfloat16), backend="fast")
+    k4 = tuning.make_key(k, jnp.ones(16), backend="xla")
+    assert len({k1.as_str(), k2.as_str(), k3.as_str(), k4.as_str()}) == 4
+
+
+def test_constraint_filters_sweep_points():
+    k = PortableKernel(name="constrained")
+    k.add_backend("xla", lambda x: x)
+    k.add_backend("fast", lambda x, *, block=4: x + x)
+    k.declare_tunables(
+        "fast", block=(4, 8, 16),
+        constraint=lambda p, x, **kw: x.shape[0] % p["block"] == 0)
+    r = tuning.tune(k, jnp.ones(8), backend="fast", iters=1, warmup=0)
+    assert [p["block"] for p, _ in r.swept] == [4, 8]
+
+
+def test_call_tuned_uses_cached_params(tmp_path):
+    seen = []
+    k = PortableKernel(name="tunedcall")
+    k.add_backend("xla", lambda x: x)
+
+    def fast(x, *, block=8):
+        seen.append(block)
+        return x + x
+
+    k.add_backend("fast", fast)
+    k.declare_tunables("fast", block=(4, 8, 16))
+    cache = tuning.TuningCache(path=tmp_path / "t.json")
+    x = jnp.ones(16)
+
+    # miss -> declared default
+    k(x, backend="fast", tuned=True, tuning_cache=cache)
+    assert seen[-1] == 8
+
+    key = tuning.make_key(k, x, backend="fast")
+    cache.put(key, {"block": 16}, 1e-6)
+    k(x, backend="fast", tuned=True, tuning_cache=cache)
+    assert seen[-1] == 16
+
+    # explicit kwargs always win over the cache
+    k(x, backend="fast", tuned=True, tuning_cache=cache, block=4)
+    assert seen[-1] == 4
+
+
+def test_registered_kernels_declare_tunable_spaces():
+    import repro.kernels  # noqa: F401
+    from repro.core.portable import registry
+    for name, param in [("stencil7", "by"),
+                        ("babelstream.triad", "block_rows"),
+                        ("minibude.fasten", "pose_tile"),
+                        ("hartree_fock.twoel", "i_tile"),
+                        ("attention.flash", "bq"),
+                        ("rwkv6.wkv", "chunk")]:
+        space = registry.get(name).tunable_space("pallas_interpret")
+        assert space is not None and param in space.params, name
+
+
+# --------------------------------------------------------------------------
+# registry-driven Eq.-4 sweep (tier-1 smoke)
+# --------------------------------------------------------------------------
+def test_portability_sweep_smoke(tmp_path):
+    from benchmarks import portability
+
+    artifact = portability.run(
+        smoke=True,
+        json_path=str(tmp_path / "BENCH_portability.json"),
+        cache_path=str(tmp_path / "tuning.json"))
+
+    on_disk = json.loads((tmp_path / "BENCH_portability.json").read_text())
+    assert on_disk["schema"] == "repro.portability/v1"
+    assert on_disk["smoke"] is True
+    assert on_disk["phi"] == artifact["phi"]
+
+    measured = [r for r in artifact["kernels"] if r["e_i"] is not None]
+    apps = {r["app"] for r in measured}
+    assert len(apps) >= 4, apps
+    for r in measured:
+        assert r["seconds_tuned"] <= r["seconds_default"] * 1.0 + 1e-12
+        assert r["backend"] == "pallas_interpret"  # CPU host
+        assert np.isfinite(r["e_i"]) and r["e_i"] > 0
+    assert artifact["phi"]["overall"] is not None
+    assert set(artifact["phi"]["per_app"]) == apps
