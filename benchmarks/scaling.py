@@ -1,0 +1,260 @@
+"""Weak/strong device-count scaling of the science kernels (BENCH_scaling.json).
+
+The paper's Eq.-4 methodology compares compiler backends on one device; this
+module extends the axis to *device count* via the ``xla_shard`` backends the
+domain-decomposition subsystem registers (``repro.distributed.domain``):
+
+  * **strong scaling** — fixed global problem, growing shard count:
+      efficiency(S) = t_1 / (S * t_S)
+    against the single-device ``xla`` oracle at the same global size;
+  * **weak scaling** — fixed *per-shard* problem, global size grows with S:
+      efficiency(S) = t_1(base) / t_S(S * base).
+
+Hartree-Fock has no linear weak-scaling axis (work is O(N^4) in the atom
+count) and records a skip reason instead of a fake curve.
+
+Run on CPU via simulated devices, exactly how ``launch/dryrun.py`` fakes its
+512-chip topology: when the current process already pinned jax to a single
+device, the module re-execs itself in a subprocess with
+``--xla_force_host_platform_device_count`` appended to XLA_FLAGS
+(``repro.launch.hostsim`` — a user-set value is respected, never clobbered).
+CPU caveat: "devices" are threads of one host, so efficiencies here validate
+the *machinery* and the shapes of the curves, not hardware scaling.
+
+    PYTHONPATH=src python -m benchmarks.run [--smoke] --only scaling
+    PYTHONPATH=src python -m benchmarks.scaling [--smoke] [--devices 8]
+
+Artifact schema (``repro.scaling/v1``)::
+
+    {"schema": "repro.scaling/v1", "platform": str, "smoke": bool,
+     "num_devices": int,
+     "kernels": [
+       {"kernel": str, "backend": "xla_shard", "baseline_backend": "xla",
+        "skipped": str | null,
+        "strong": {"shape": str, "baseline_seconds": float,
+                   "points": [{"num_shards": int, "seconds": float,
+                               "speedup": float, "efficiency": float}]},
+        "weak": {"base_shape": str, "baseline_seconds": float,
+                 "points": [{"num_shards": int, "shape": str,
+                             "seconds": float, "efficiency": float}]}
+                | {"skipped": str}}]}
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from typing import Any, Dict, List, Optional
+
+from benchmarks.common import emit
+
+ARTIFACT = "BENCH_scaling.json"
+SCHEMA = "repro.scaling/v1"
+DEFAULT_DEVICES = 8
+
+
+# --------------------------------------------------------------------------
+# problem-size catalogue (global extents divisible by every swept shard count)
+# --------------------------------------------------------------------------
+def _stencil_args(nz, smoke):
+    import jax.numpy as jnp
+    import numpy as np
+    ny, nx = (16, 32) if smoke else (64, 128)
+    u = np.random.default_rng(0).standard_normal((nz, ny, nx))
+    return (jnp.asarray(u, jnp.float32),)
+
+
+def _stream_args(n, smoke, nargs):
+    import jax.numpy as jnp
+    import numpy as np
+    r = np.random.default_rng(0)
+    return tuple(jnp.asarray(r.standard_normal(n), jnp.float32)
+                 for _ in range(nargs))
+
+
+def _minibude_args(nposes, smoke):
+    from repro.kernels.minibude import ops as mb_ops
+    natpro, natlig = (16, 4) if smoke else (64, 8)
+    return mb_ops.make_deck(natpro=natpro, natlig=natlig, nposes=nposes,
+                            seed=0)
+
+
+def _hf_args(natoms, smoke):
+    from repro.kernels.hartree_fock import ref as hf_ref
+    return (hf_ref.helium_lattice(natoms), hf_ref.initial_density(natoms))
+
+
+#: kernel -> (strong extent, weak per-shard extent, args factory); extents
+#: are the decomposed axis (stencil z planes, stream elements, poses, atoms)
+def _catalogue(smoke: bool) -> Dict[str, Dict[str, Any]]:
+    return {
+        "stencil7": {
+            "strong": 16 if smoke else 64,
+            "weak": 2 if smoke else 8,
+            "make": lambda n: _stencil_args(n, smoke),
+        },
+        "babelstream.triad": {
+            "strong": 1 << 14 if smoke else 1 << 20,
+            "weak": 1 << 12 if smoke else 1 << 17,
+            "make": lambda n: _stream_args(n, smoke, 2),
+        },
+        "babelstream.dot": {
+            "strong": 1 << 14 if smoke else 1 << 20,
+            "weak": 1 << 12 if smoke else 1 << 17,
+            "make": lambda n: _stream_args(n, smoke, 2),
+        },
+        "minibude.fasten": {
+            "strong": 128 if smoke else 1024,
+            "weak": 64 if smoke else 256,
+            "make": lambda n: _minibude_args(n, smoke),
+        },
+        "hartree_fock.twoel": {
+            "strong": 8 if smoke else 16,
+            "weak": None,  # O(N^4) work: no linear weak-scaling axis
+            "weak_skip": "work is O(N^4) in atoms; no linear weak axis",
+            "make": lambda n: _hf_args(n, smoke),
+        },
+    }
+
+
+def _shape_sig(args) -> str:
+    from repro.core.tuning import shape_signature
+    return shape_signature(*args)
+
+
+def _time(kernel, args, backend, iters, warmup, **kw) -> float:
+    return kernel.time_backend(*args, backend=backend, iters=iters,
+                               warmup=warmup, **kw)
+
+
+def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
+    import jax
+
+    import repro.kernels  # noqa: F401  (registers xla_shard backends)
+    from repro.core.portable import registry
+    from repro.distributed.domain import SHARD_BACKEND
+
+    dc = jax.device_count()
+    shard_counts = [s for s in ((2, 4) if smoke else (2, 4, 8)) if s <= dc]
+    iters, warmup = (1, 1) if smoke else (3, 1)
+    records: List[Dict[str, Any]] = []
+
+    for name, spec in _catalogue(smoke).items():
+        kernel = registry.get(name)
+        b = kernel.backends.get(SHARD_BACKEND)
+        rec: Dict[str, Any] = {"kernel": name, "backend": SHARD_BACKEND,
+                               "baseline_backend": kernel.oracle,
+                               "skipped": None}
+        if b is None or not b.is_available():
+            rec["skipped"] = (f"{SHARD_BACKEND} unavailable "
+                              f"({dc} device(s))")
+            records.append(rec)
+            continue
+
+        # strong: fixed global problem, shards grow
+        args = spec["make"](spec["strong"])
+        t1 = _time(kernel, args, kernel.oracle, iters, warmup)
+        points = []
+        for s in shard_counts:
+            ts = _time(kernel, args, SHARD_BACKEND, iters, warmup,
+                       num_shards=s)
+            eff = t1 / (s * ts)
+            points.append({"num_shards": s, "seconds": ts,
+                           "speedup": t1 / ts, "efficiency": eff})
+            emit(f"scaling.{name}.strong.s{s}", ts,
+                 f"eff={eff:.3f} speedup={t1 / ts:.2f}x")
+        rec["strong"] = {"shape": _shape_sig(args), "baseline_seconds": t1,
+                         "points": points}
+
+        # weak: fixed per-shard problem, global grows with shards
+        if spec["weak"] is None:
+            rec["weak"] = {"skipped": spec["weak_skip"]}
+        else:
+            base_args = spec["make"](spec["weak"])
+            t1w = _time(kernel, base_args, kernel.oracle, iters, warmup)
+            points = []
+            for s in shard_counts:
+                args_s = spec["make"](spec["weak"] * s)
+                ts = _time(kernel, args_s, SHARD_BACKEND, iters, warmup,
+                           num_shards=s)
+                eff = t1w / ts
+                points.append({"num_shards": s, "shape": _shape_sig(args_s),
+                               "seconds": ts, "efficiency": eff})
+                emit(f"scaling.{name}.weak.s{s}", ts, f"eff={eff:.3f}")
+            rec["weak"] = {"base_shape": _shape_sig(base_args),
+                           "baseline_seconds": t1w, "points": points}
+        records.append(rec)
+
+    artifact = {
+        "schema": SCHEMA,
+        "platform": jax.devices()[0].platform,
+        "smoke": smoke,
+        "num_devices": dc,
+        "kernels": records,
+    }
+    with open(json_path, "w") as f:
+        json.dump(artifact, f, indent=1, sort_keys=True)
+    return artifact
+
+
+# --------------------------------------------------------------------------
+# entry points: re-exec under simulated devices when pinned to one
+# --------------------------------------------------------------------------
+def run(smoke: bool = False, json_path: str = ARTIFACT,
+        devices: int = DEFAULT_DEVICES) -> Dict[str, Any]:
+    """Measure in-process when >= 2 devices are visible; otherwise re-exec
+    this module in a subprocess with the host-device-count flag appended
+    (jax reads XLA_FLAGS once, at backend init — too late for *this*
+    process).  Returns the artifact dict (also written to ``json_path``)."""
+    import jax
+    if jax.device_count() >= 2:
+        return _measure(smoke=smoke, json_path=json_path)
+    if os.environ.get("REPRO_SCALING_CHILD"):
+        # we *are* the re-exec and still see one device: the user's own
+        # XLA_FLAGS pins the topology — fail loudly instead of forking again
+        raise RuntimeError(
+            "scaling needs >= 2 devices but XLA_FLAGS pins a 1-device "
+            "topology; unset --xla_force_host_platform_device_count or "
+            "raise it")
+
+    from repro.launch.hostsim import merged_xla_flags
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = merged_xla_flags(devices, env)
+    env["REPRO_SCALING_CHILD"] = "1"
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                       "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    # the child runs from the repo root (so `-m benchmarks.scaling`
+    # resolves); absolutize the artifact path against OUR cwd first or the
+    # parent would read a missing/stale file after the child succeeded
+    json_path = os.path.abspath(json_path)
+    cmd = [sys.executable, "-m", "benchmarks.scaling", "--json", json_path,
+           "--devices", str(devices)]
+    if smoke:
+        cmd.append("--smoke")
+    # child CSV rows stream through to our stdout (same scaffold contract)
+    proc = subprocess.run(
+        cmd, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if proc.returncode:
+        raise RuntimeError(
+            f"scaling subprocess failed with exit code {proc.returncode}")
+    with open(json_path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--json", default=ARTIFACT)
+    ap.add_argument("--devices", type=int, default=DEFAULT_DEVICES)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, json_path=args.json, devices=args.devices)
+
+
+if __name__ == "__main__":
+    main()

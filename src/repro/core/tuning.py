@@ -20,14 +20,28 @@ spine:
     (``TuningResult.skipped``), never crashed into, so a CPU host can sweep
     a catalogue that also contains TPU-only backends.
 
+Grids past ``COORD_THRESHOLD`` points switch (under ``search="auto"``) to a
+budgeted coordinate descent: sweep one parameter at a time from a
+deterministic start, repeat until a full pass stops improving or the timing
+budget runs out.  Budgeted results are cached with a ``"coordinate"``
+provenance marker and are **never** served to a caller whose sweep would be
+exhaustive — a partial search must not masquerade as the tuned optimum.
+
 Cache location: ``$REPRO_TUNING_CACHE`` if set, else
-``~/.cache/repro/tuning.json``.  The file maps the key string to
-``{"params": {...}, "seconds": float}`` and is rewritten atomically.
+``~/.cache/repro/tuning.json``.  Schema v2
+(``{"schema": "repro.tuning/v2", "entries": {key: {"params", "seconds",
+"search"}}}``, rewritten atomically): keys embed a hash of the backend
+function's source, so editing a kernel invalidates its tuned params instead
+of silently serving stale block sizes.  v1 files (flat, no code hash) are
+discarded wholesale on load — that is the invalidation, not data loss.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
+import inspect
 import json
 import os
 import tempfile
@@ -45,12 +59,19 @@ __all__ = [
     "TuningResult",
     "make_key",
     "shape_signature",
+    "backend_code_hash",
     "tune",
     "cached_best_params",
     "default_cache_path",
+    "COORD_THRESHOLD",
 ]
 
 CACHE_ENV = "REPRO_TUNING_CACHE"
+CACHE_SCHEMA = "repro.tuning/v2"
+
+#: grids larger than this switch from exhaustive sweep to coordinate descent
+#: under ``search="auto"``
+COORD_THRESHOLD = 16
 
 
 # --------------------------------------------------------------------------
@@ -75,17 +96,104 @@ def shape_signature(*args: Any, **kwargs: Any) -> str:
 @dataclasses.dataclass(frozen=True)
 class TuningKey:
     """Cache key: a tuned configuration is only valid for the exact problem
-    shape/dtype on the platform it was measured on."""
+    shape/dtype on the platform *and device count* it was measured on
+    (``num_shards=8`` tuned under 8 devices must not be replayed on 2) —
+    and only for the exact backend *code* it was measured against
+    (``code`` hashes the backend function's source, so kernel edits
+    invalidate their cached params)."""
 
     kernel: str
     backend: str
     shape: str
     dtype: str
     platform: str
+    code: str = "-"
+    devices: int = 1
 
     def as_str(self) -> str:
         return "|".join((self.kernel, self.backend, self.shape, self.dtype,
-                         self.platform))
+                         self.platform, self.code, f"d{self.devices}"))
+
+
+_CODE_HASHES: Dict[int, Tuple[Any, str]] = {}
+
+
+def _own_source(fn: Any) -> str:
+    try:
+        return inspect.getsource(fn)
+    except (OSError, TypeError):
+        code = getattr(fn, "__code__", None)
+        return code.co_code.hex() if code is not None else repr(fn)
+
+
+def _referenced_file_hashes(fn: Any) -> List[str]:
+    """sha1s of the repro source files a backend wrapper dispatches into.
+
+    Registered backends are mostly thin wrappers (``laplacian_pallas`` is
+    three lines around ``K.laplacian_3d``), so hashing only their own
+    source would miss the kernel-body edits this key exists to catch.  For
+    every module/function the wrapper's code references by global name,
+    pull in the defining *file's* digest — editing kernel.py/ref.py then
+    changes the wrapper's key even though the wrapper text didn't move.
+    One level deep on purpose: the file granularity already covers the
+    helpers those files call internally."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return []
+    parts: List[str] = []
+    marker = os.sep + "repro" + os.sep
+    g = getattr(fn, "__globals__", {})
+    for name in code.co_names:
+        val = g.get(name)
+        path = None
+        if inspect.ismodule(val):
+            path = getattr(val, "__file__", None)
+        elif inspect.isfunction(val):
+            mod = inspect.getmodule(val)
+            path = getattr(mod, "__file__", None) if mod else None
+        if path and marker in path:
+            try:
+                digest = hashlib.sha1(Path(path).read_bytes()).hexdigest()
+            except OSError:
+                continue
+            parts.append(f"{name}={digest}")
+    return parts
+
+
+def backend_code_hash(fn: Any) -> str:
+    """Short sha1 identifying the backend's *implementation*: its own
+    source (jit wrappers and partials unwrapped first), the repr of its
+    closure constants (factory-made wrappers share source but close over
+    different ops), and the file digests of the repro modules/functions it
+    dispatches into (thin wrappers change when the kernel body does).
+    Falls back to bytecode, then repr, when source is unavailable — the
+    hash only needs to *change when the kernel changes*, not be
+    human-readable."""
+    hit = _CODE_HASHES.get(id(fn))
+    if hit is not None and hit[0] is fn:
+        return hit[1]
+    target, root = fn, fn
+    for _ in range(16):
+        if isinstance(target, functools.partial):
+            target = target.func
+        elif getattr(target, "__wrapped__", None) is not None:
+            target = target.__wrapped__
+        else:
+            break
+    parts = [_own_source(target)]
+    code = getattr(target, "__code__", None)
+    closure = getattr(target, "__closure__", None) or ()
+    for name, cell in zip(code.co_freevars if code else (), closure):
+        try:
+            val = cell.cell_contents
+        except ValueError:  # pragma: no cover - still-empty cell
+            continue
+        parts.append(f"{name}:{_own_source(val)}"
+                     if inspect.isfunction(val) else f"{name}={val!r}")
+    parts.extend(_referenced_file_hashes(target))
+    digest = hashlib.sha1("\n".join(parts).encode()).hexdigest()[:12]
+    _CODE_HASHES[id(root)] = (root, digest)
+    return digest
 
 
 def _platform() -> str:
@@ -95,15 +203,25 @@ def _platform() -> str:
         return "unknown"
 
 
+def _device_count() -> int:
+    try:
+        return jax.device_count()
+    except Exception:  # pragma: no cover - no jax backend at all
+        return 1
+
+
 def make_key(kernel: PortableKernel, *args: Any, backend: str,
              **kwargs: Any) -> TuningKey:
     dtypes = [str(a.dtype) for a in args if hasattr(a, "dtype")]
+    b = kernel.backends.get(backend)
     return TuningKey(
         kernel=kernel.name,
         backend=backend,
         shape=shape_signature(*args, **kwargs),
         dtype=dtypes[0] if dtypes else "-",
         platform=_platform(),
+        code=backend_code_hash(b.fn) if b is not None else "-",
+        devices=_device_count(),
     )
 
 
@@ -118,7 +236,8 @@ def default_cache_path() -> Path:
 
 
 class TuningCache:
-    """Persistent JSON map ``key-string -> {"params", "seconds"}``.
+    """Persistent JSON map ``key-string -> {"params", "seconds", "search"}``
+    wrapped in a schema envelope (``CACHE_SCHEMA``).
 
     Writes are atomic (tmp file + rename) so concurrent runs cannot leave a
     torn file behind, and each ``put`` merges the on-disk state back in
@@ -127,35 +246,42 @@ class TuningCache:
     fine — both wrote a valid measurement).  Cached ``seconds`` are
     historical: they skip the re-search, but anything computing a ratio
     against a fresh timing must re-time at the cached params
-    (``benchmarks/portability.py`` does).
+    (``benchmarks/portability.py`` does).  ``search`` records provenance
+    (``"exhaustive"`` vs ``"coordinate"``); pre-v2 files lack the code-hash
+    keys this schema exists for and are discarded on load.
     """
 
     def __init__(self, path: Optional[os.PathLike] = None) -> None:
         self.path = Path(path) if path is not None else default_cache_path()
         self._data: Optional[Dict[str, Dict[str, Any]]] = None
 
+    @staticmethod
+    def _read_entries(path: Path) -> Dict[str, Dict[str, Any]]:
+        try:
+            raw = json.loads(path.read_text())
+        except (OSError, ValueError):
+            return {}
+        if not isinstance(raw, dict) or raw.get("schema") != CACHE_SCHEMA:
+            return {}  # v1 (or foreign) file: stale keys, start over
+        entries = raw.get("entries")
+        return entries if isinstance(entries, dict) else {}
+
     def _load(self) -> Dict[str, Dict[str, Any]]:
         if self._data is None:
-            try:
-                self._data = json.loads(self.path.read_text())
-            except (OSError, ValueError):
-                self._data = {}
+            self._data = self._read_entries(self.path)
         return self._data
 
     def get(self, key: TuningKey) -> Optional[Dict[str, Any]]:
         return self._load().get(key.as_str())
 
-    def put(self, key: TuningKey, params: Dict[str, Any],
-            seconds: float) -> None:
+    def put(self, key: TuningKey, params: Dict[str, Any], seconds: float,
+            search: str = "exhaustive") -> None:
         data = self._load()
-        try:
-            on_disk = json.loads(self.path.read_text())
-        except (OSError, ValueError):
-            on_disk = {}
-        for k, v in on_disk.items():
+        for k, v in self._read_entries(self.path).items():
             data.setdefault(k, v)
         data[key.as_str()] = {"params": dict(params),
-                              "seconds": float(seconds)}
+                              "seconds": float(seconds),
+                              "search": search}
         self._save(data)
 
     def _save(self, data: Dict[str, Dict[str, Any]]) -> None:
@@ -164,7 +290,8 @@ class TuningCache:
                                    prefix=self.path.name, suffix=".tmp")
         try:
             with os.fdopen(fd, "w") as f:
-                json.dump(data, f, indent=1, sort_keys=True)
+                json.dump({"schema": CACHE_SCHEMA, "entries": data}, f,
+                          indent=1, sort_keys=True)
             os.replace(tmp, self.path)
         except BaseException:
             try:
@@ -191,11 +318,56 @@ class TuningResult:
     swept: List[Tuple[Dict[str, Any], float]]  # every timed (point, seconds)
     cached: bool                      # True = served from the cache, no timing
     skipped: Optional[str] = None     # reason this backend was not tuned
+    search: str = "exhaustive"        # "exhaustive" | "coordinate"
+
+
+def _coordinate_descent(kernel, space, points, budget, time_point):
+    """Budgeted one-parameter-at-a-time search over the valid grid.
+
+    Deterministic: starts at the first valid point, walks parameters in
+    declaration order, moves only on strict improvement (ties keep the
+    earlier point).  ``budget`` caps the number of *distinct* points timed;
+    already-timed points are free.  Returns (best_params, best_secs).
+    """
+    names = list(space.params)
+    index = {tuple(p[n] for n in names): p for p in points}
+    timed: Dict[Tuple[Any, ...], float] = {}
+
+    def measure(p):
+        k = tuple(p[n] for n in names)
+        if k in timed:
+            return timed[k], False
+        if len(timed) >= budget:
+            return None, True
+        timed[k] = time_point(p)
+        return timed[k], False
+
+    cur = points[0]
+    cur_secs, exhausted = measure(cur)
+    improved = True
+    while improved and not exhausted:
+        improved = False
+        for name in names:
+            for value in space.params[name]:
+                cand_key = tuple(value if n == name else cur[n]
+                                 for n in names)
+                cand = index.get(cand_key)
+                if cand is None:  # constraint excluded this neighbour
+                    continue
+                secs, exhausted = measure(cand)
+                if exhausted:
+                    break
+                if secs < cur_secs:
+                    cur, cur_secs, improved = cand, secs, True
+            if exhausted:
+                break
+    return cur, cur_secs
 
 
 def tune(kernel: PortableKernel, *args: Any, backend: str,
          cache: Optional[TuningCache] = None, iters: int = 3,
          warmup: int = 1, max_points: Optional[int] = None,
+         search: str = "auto", budget: Optional[int] = None,
          **kwargs: Any) -> TuningResult:
     """Find (or recall) the best tunable point for one backend + inputs.
 
@@ -204,7 +376,17 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
     configuration.  A cache hit skips all timing.  An unavailable backend
     or a backend with an empty valid grid returns ``skipped=<reason>``
     with the declared defaults instead of raising.
+
+    ``search`` picks the strategy: ``"exhaustive"`` times every valid
+    point; ``"coordinate"`` runs a budgeted coordinate descent
+    (``budget`` distinct points, default twice the summed per-parameter
+    grid lengths); ``"auto"`` (default) uses coordinate descent only when
+    the valid grid exceeds ``COORD_THRESHOLD`` points.  A budgeted result
+    is cached with ``search="coordinate"`` provenance and is never served
+    to a caller whose own sweep would be exhaustive.
     """
+    if search not in ("auto", "exhaustive", "coordinate"):
+        raise ValueError(f"unknown search mode {search!r}")
     b = kernel.backends.get(backend)
     if b is None:
         raise KeyError(
@@ -218,14 +400,6 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
                     f"{_platform()!r}")
 
     key = make_key(kernel, *args, backend=backend, **kwargs)
-    if cache is not None:
-        hit = cache.get(key)
-        if hit is not None:
-            return TuningResult(
-                kernel=kernel.name, backend=backend,
-                params=dict(hit["params"]), seconds=float(hit["seconds"]),
-                swept=[], cached=True)
-
     space = kernel.tunable_space(backend)
     if space is None:
         # not cached: a cache hit would flip skipped/swept on repeat runs,
@@ -237,8 +411,27 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
                             skipped="no tunable space declared")
 
     points = space.valid_points(*args, **kwargs)
+    coordinate = (search == "coordinate"
+                  or (search == "auto" and len(points) > COORD_THRESHOLD))
+
+    if cache is not None:
+        hit = cache.get(key)
+        if hit is not None:
+            hit_search = hit.get("search", "exhaustive")
+            # a budgeted (coordinate) entry must not satisfy an exhaustive
+            # request — fall through and run the full sweep instead
+            if not (hit_search == "coordinate" and not coordinate):
+                return TuningResult(
+                    kernel=kernel.name, backend=backend,
+                    params=dict(hit["params"]),
+                    seconds=float(hit["seconds"]), swept=[], cached=True,
+                    search=hit_search)
+
+    # max_points is the smoke lane's hard work bound and applies to BOTH
+    # strategies: exhaustive sweeps drop the grid tail, coordinate descent
+    # caps its timing budget — and neither bounded result may persist
     truncated = max_points is not None and len(points) > max_points
-    if truncated:
+    if truncated and not coordinate:
         points = points[:max_points]
     if not points:
         return TuningResult(
@@ -247,34 +440,47 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
             skipped="no valid tunable point for these inputs")
 
     swept: List[Tuple[Dict[str, Any], float]] = []
-    best_params: Optional[Dict[str, Any]] = None
-    best_secs = float("inf")
-    for point in points:
+
+    def time_point(point):
         try:
             secs = kernel.time_backend(*args, backend=backend, iters=iters,
                                        warmup=warmup, **point, **kwargs)
         except (ValueError, TypeError):
             # a point the constraint failed to exclude — record and move on
-            swept.append((point, float("inf")))
-            continue
+            secs = float("inf")
         swept.append((point, secs))
-        if secs < best_secs:
-            best_secs, best_params = secs, point
+        return secs
 
-    if best_params is None:
+    if coordinate:
+        if budget is None:
+            budget = 2 * sum(len(v) for v in space.params.values())
+        if max_points is not None:
+            budget = min(budget, max_points)
+        best_params, best_secs = _coordinate_descent(
+            kernel, space, points, max(budget, 1), time_point)
+    else:
+        best_params, best_secs = None, float("inf")
+        for point in points:
+            secs = time_point(point)
+            if secs < best_secs:
+                best_secs, best_params = secs, point
+
+    if best_params is None or best_secs == float("inf"):
         return TuningResult(
             kernel=kernel.name, backend=backend, params={},
             seconds=float("inf"), swept=swept, cached=False,
             skipped="every tunable point failed to run")
 
+    mode = "coordinate" if coordinate else "exhaustive"
     result = TuningResult(kernel=kernel.name, backend=backend,
                           params=best_params, seconds=best_secs, swept=swept,
-                          cached=False)
+                          cached=False, search=mode)
     # a truncated sweep (smoke lane) must not poison the cache: its key is
     # identical to the full run's, which would then inherit the partial
-    # search as if it were the tuned optimum
+    # search as if it were the tuned optimum; coordinate results persist,
+    # but carry their provenance so exhaustive callers re-search
     if cache is not None and not truncated:
-        cache.put(key, result.params, result.seconds)
+        cache.put(key, result.params, result.seconds, search=mode)
     return result
 
 

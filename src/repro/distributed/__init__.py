@@ -1,1 +1,9 @@
-"""distributed subsystem."""
+"""Distributed subsystem: sharding policy, fault tolerance, and the
+domain-decomposition science-kernel backends.
+
+``repro.distributed.domain`` registers multi-device ``xla_shard`` backends
+(slab/block/pose/quartet decompositions over ``jax.shard_map``) for every
+science-kernel family; ``repro.distributed.collectives`` holds the halo-
+exchange/psum vocabulary they share.  Neither is imported here — importing
+this package must stay side-effect free (no jax device queries); the kernel
+catalogue (``import repro.kernels``) pulls ``domain`` in explicitly."""

@@ -1,0 +1,79 @@
+"""Thin collective helpers for the domain-decomposition subsystem.
+
+Everything here runs *inside* ``shard_map``-mapped functions, against a named
+mesh axis.  The helpers are deliberately minimal — they wrap ``lax.ppermute``
+/ ``lax.psum`` with the ring-permutation bookkeeping that every 1-D
+decomposition needs, and nothing else:
+
+  * ``ring_perm(n, offset, wrap)`` builds the (src, dst) pairs for a shift
+    along a ring of ``n`` shards.  Non-wrapping shifts leave the edge shards
+    without a source, and ``lax.ppermute`` fills un-addressed outputs with
+    zeros — exactly the zero Dirichlet halo the stencil oracle assumes.
+  * ``shift(x, axis_name, n, offset)`` moves each shard's block ``offset``
+    positions along the mesh axis.
+  * ``halo_exchange(u, axis_name, n)`` swaps boundary slabs with both
+    neighbours and returns ``(from_prev, from_next)`` halos.
+  * ``psum`` is re-exported so kernel code imports one module for its
+    communication vocabulary.
+
+``n`` (the mesh-axis size) is always passed statically: permutation tables
+are Python-level metadata, not traced values.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+from jax.lax import psum  # noqa: F401  (re-export)
+
+__all__ = ["ring_perm", "shift", "halo_exchange", "psum"]
+
+
+def ring_perm(n: int, offset: int = 1,
+              wrap: bool = False) -> List[Tuple[int, int]]:
+    """(source, destination) pairs shifting data ``offset`` shards forward.
+
+    ``wrap=False`` drops pairs that would cross the ends: the shards there
+    receive zeros from ``ppermute`` (the non-periodic boundary).  Offsets
+    beyond the ring are valid and simply address fewer pairs.
+    """
+    if n < 1:
+        raise ValueError(f"ring needs at least one shard, got n={n}")
+    pairs = []
+    for src in range(n):
+        dst = src + offset
+        if wrap:
+            pairs.append((src, dst % n))
+        elif 0 <= dst < n:
+            pairs.append((src, dst))
+    return pairs
+
+
+def shift(x: jnp.ndarray, axis_name: str, n: int, offset: int = 1,
+          wrap: bool = False) -> jnp.ndarray:
+    """Each shard receives the block of the shard ``offset`` positions
+    *before* it (zeros at the open ends when ``wrap=False``)."""
+    return lax.ppermute(x, axis_name, ring_perm(n, offset, wrap))
+
+
+def halo_exchange(u: jnp.ndarray, axis_name: str, n: int, *, axis: int = 0,
+                  halo: int = 1,
+                  wrap: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exchange ``halo``-thick boundary slabs with both ring neighbours.
+
+    Returns ``(from_prev, from_next)``: the previous shard's trailing slab
+    and the next shard's leading slab along ``axis``.  At the open ends the
+    missing neighbour's halo is zeros (``ppermute`` zero-fills), matching
+    the zero-boundary convention of the stencil oracle.
+    """
+    extent = u.shape[axis]
+    if halo > extent:
+        raise ValueError(
+            f"halo={halo} exceeds local extent {extent} along axis {axis}")
+    leading = lax.slice_in_dim(u, 0, halo, axis=axis)
+    trailing = lax.slice_in_dim(u, extent - halo, extent, axis=axis)
+    from_prev = shift(trailing, axis_name, n, offset=1, wrap=wrap)
+    from_next = shift(leading, axis_name, n, offset=-1, wrap=wrap)
+    return from_prev, from_next

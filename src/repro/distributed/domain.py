@@ -1,0 +1,350 @@
+"""Domain decomposition: the science kernels as multi-device registry backends.
+
+The paper measures portability across *compiler backends* on one GPU; the
+Eq.-4 methodology generalizes to the device-count axis (Godoy et al., 2023
+run these same workloads across full exascale nodes).  This module supplies
+that axis: each science-kernel family gains an ``xla_shard`` backend that
+runs the oracle arithmetic under ``jax.shard_map`` over a 1-D device mesh —
+
+  * **stencil7** — 1-D slab decomposition along z with a one-plane
+    ``ppermute`` halo exchange (``collectives.halo_exchange``); each shard
+    applies the unchanged oracle stencil to its halo-padded slab, so the
+    sharded field is *bitwise identical* to the single-device result
+    (elementwise arithmetic, no cross-shard reductions);
+  * **babelstream** — block-partitioned 1-D arrays; copy/mul/add/triad are
+    embarrassingly parallel (bitwise identical), ``dot`` reduces each block
+    locally in the accumulation dtype and combines partials with ``psum``;
+  * **minibude.fasten** — pose-parallel: poses shard across devices, the
+    protein/ligand decks replicate, per-pose energies are independent
+    (bitwise identical);
+  * **hartree_fock.twoel** — each device computes the ERI slab for its range
+    of the *l* quartet index, contracts it with the matching density
+    columns, and the partial Fock matrices accumulate with ``psum`` — the
+    distributed analogue of the paper's atomic scatter-adds, without the
+    contention.
+
+Backends register in the existing ``PortableKernel`` registry with
+``available = device_count >= 2`` and a tunable ``num_shards`` grid, so
+``repro.core.tuning`` and the Eq.-4 sweep extend to the device axis with no
+registry changes.  On a CPU host, simulate devices with
+``repro.launch.hostsim.ensure_host_device_count(8)`` *before* importing jax
+(``benchmarks/scaling.py`` and ``repro.distributed.selftest`` do).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.core.portable import get_kernel
+from repro.distributed import collectives
+from repro.kernels.babelstream import ref as stream_ref
+from repro.kernels.hartree_fock import ref as hf_ref
+from repro.kernels.minibude import ref as mb_ref
+from repro.kernels.stencil7 import ref as s7_ref
+
+__all__ = [
+    "AXIS",
+    "SHARD_BACKEND",
+    "shard_mesh",
+    "multi_device",
+    "resolve_num_shards",
+    "laplacian_shard",
+    "stream_shard_fns",
+    "fasten_shard",
+    "fock_shard",
+    "register_sharded_backends",
+]
+
+#: mesh axis name every sharded kernel maps over
+AXIS = "shards"
+#: registry backend name (xla arithmetic + sharding, hence the prefix)
+SHARD_BACKEND = "xla_shard"
+#: num_shards grid declared to the autotuner
+SHARD_GRID = (2, 4, 8)
+
+
+def multi_device() -> bool:
+    """Availability predicate for every ``xla_shard`` backend."""
+    try:
+        return jax.device_count() >= 2
+    except Exception:  # pragma: no cover - no jax backend at all
+        return False
+
+
+@functools.lru_cache(maxsize=None)
+def shard_mesh(num_shards: int) -> Mesh:
+    """1-D mesh over the first ``num_shards`` local devices."""
+    devices = jax.devices()
+    if num_shards > len(devices):
+        raise ValueError(
+            f"num_shards={num_shards} exceeds the {len(devices)} available "
+            f"device(s)")
+    return Mesh(np.array(devices[:num_shards]), (AXIS,))
+
+
+def resolve_num_shards(extent: int, num_shards: Optional[int] = None,
+                       device_count: Optional[int] = None) -> int:
+    """Validate an explicit shard count, or pick the largest usable one.
+
+    ``extent`` is the decomposed axis length; a valid count divides it, is
+    at least 2, and does not exceed the device count.  ``num_shards=None``
+    chooses the largest valid count (deterministic), raising when even 2
+    shards cannot be used.
+    """
+    if device_count is None:
+        device_count = jax.device_count()
+    if num_shards is not None:
+        if num_shards < 2:
+            raise ValueError(f"num_shards must be >= 2, got {num_shards}")
+        if num_shards > device_count:
+            raise ValueError(
+                f"num_shards={num_shards} exceeds device_count="
+                f"{device_count}")
+        if extent % num_shards:
+            raise ValueError(
+                f"num_shards={num_shards} does not divide the decomposed "
+                f"extent {extent}")
+        return num_shards
+    for s in range(min(device_count, extent), 1, -1):
+        if extent % s == 0:
+            return s
+    raise ValueError(
+        f"no valid shard count for extent {extent} on {device_count} "
+        f"device(s)")
+
+
+def _shard_ok(num_shards: int, extent: int) -> bool:
+    """Tunable-space constraint twin of ``resolve_num_shards``."""
+    return (num_shards >= 2 and num_shards <= jax.device_count()
+            and extent % num_shards == 0)
+
+
+# --------------------------------------------------------------------------
+# stencil7: 1-D slab decomposition + halo exchange
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _stencil_sharded(num_shards, invhx2, invhy2, invhz2, invhxyz2):
+    mesh = shard_mesh(num_shards)
+
+    def local(u):
+        # one-plane halos from both z-neighbours (zeros at the open ends)
+        lo, hi = collectives.halo_exchange(u, AXIS, num_shards, axis=0)
+        padded = jnp.concatenate([lo, u, hi], axis=0)
+        # the oracle on the halo-padded slab: identical per-element
+        # arithmetic to the single-device backend, so interior planes are
+        # bitwise equal; its zero-padding already handles the y/x faces
+        out = s7_ref.laplacian(padded, invhx2, invhy2, invhz2,
+                               invhxyz2)[1:-1]
+        # global z-boundary planes are *boundary*, not interior-with-a-
+        # zero-halo: force them to the oracle's zero on the edge shards
+        idx = lax.axis_index(AXIS)
+        nz = out.shape[0]
+        keep = (jnp.ones((nz,), bool).at[0].set(idx != 0)
+                & jnp.ones((nz,), bool).at[-1].set(idx != num_shards - 1))
+        return jnp.where(keep[:, None, None], out, jnp.zeros_like(out))
+
+    return jax.jit(shard_map(local, mesh, in_specs=P(AXIS),
+                             out_specs=P(AXIS)))
+
+
+def laplacian_shard(u, invhx2=1.0, invhy2=1.0, invhz2=1.0, invhxyz2=-6.0,
+                    *, num_shards: Optional[int] = None):
+    """Slab-decomposed seven-point stencil (z axis split across devices)."""
+    s = resolve_num_shards(u.shape[0], num_shards)
+    return _stencil_sharded(s, invhx2, invhy2, invhz2, invhxyz2)(u)
+
+
+# --------------------------------------------------------------------------
+# BabelStream: block-partitioned arrays, psum dot
+# --------------------------------------------------------------------------
+def _dot_local(a, b):
+    # partials stay in the accumulation dtype across the psum (the oracle
+    # only downcasts once, at the very end)
+    acc = jnp.float32 if a.dtype in (jnp.bfloat16, jnp.float16) else a.dtype
+    part = jnp.sum(a.astype(acc) * b.astype(acc))
+    return lax.psum(part, AXIS).astype(a.dtype)
+
+
+_STREAM_LOCAL = {
+    "copy": (stream_ref.copy, 1, False),
+    "mul": (stream_ref.mul, 1, True),
+    "add": (stream_ref.add, 2, False),
+    "triad": (stream_ref.triad, 2, True),
+    "dot": (_dot_local, 2, False),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_sharded(op, num_shards, scalar):
+    mesh = shard_mesh(num_shards)
+    body, nargs, takes_scalar = _STREAM_LOCAL[op]
+    local = functools.partial(body, scalar=scalar) if takes_scalar else body
+    out_spec = P() if op == "dot" else P(AXIS)
+    return jax.jit(shard_map(local, mesh, in_specs=(P(AXIS),) * nargs,
+                             out_specs=out_spec))
+
+
+def _make_stream_shard(op, nargs, takes_scalar):
+    if takes_scalar:
+        def run(*args, scalar: Optional[float] = None,
+                num_shards: Optional[int] = None):
+            arrays, rest = args[:nargs], args[nargs:]
+            if rest:
+                scalar = rest[0]
+            elif scalar is None:
+                scalar = stream_ref.START_SCALAR
+            s = resolve_num_shards(arrays[0].shape[0], num_shards)
+            return _stream_sharded(op, s, float(scalar))(*arrays)
+    else:
+        def run(*arrays, num_shards: Optional[int] = None):
+            s = resolve_num_shards(arrays[0].shape[0], num_shards)
+            return _stream_sharded(op, s, None)(*arrays)
+    run.__name__ = f"{op}_shard"
+    return run
+
+
+def stream_shard_fns():
+    """op name -> sharded backend fn, signatures matching the xla oracle."""
+    return {op: _make_stream_shard(op, nargs, takes_scalar)
+            for op, (_, nargs, takes_scalar) in _STREAM_LOCAL.items()}
+
+
+# --------------------------------------------------------------------------
+# miniBUDE: pose-parallel
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _fasten_sharded(num_shards):
+    mesh = shard_mesh(num_shards)
+    # decks replicate, poses (6, P) shard along P; per-pose energies are
+    # independent, so out_specs concatenation reassembles the exact result
+    return jax.jit(shard_map(
+        mb_ref.fasten, mesh,
+        in_specs=(P(), P(), P(), P(), P(None, AXIS)),
+        out_specs=P(AXIS)))
+
+
+def fasten_shard(protein_pos, protein_par, ligand_pos, ligand_par, poses,
+                 *, num_shards: Optional[int] = None):
+    """Pose-parallel miniBUDE energy evaluation."""
+    s = resolve_num_shards(poses.shape[1], num_shards)
+    return _fasten_sharded(s)(protein_pos, protein_par, ligand_pos,
+                              ligand_par, poses)
+
+
+# --------------------------------------------------------------------------
+# Hartree-Fock: l-slab quartet decomposition, psum Fock accumulation
+# --------------------------------------------------------------------------
+def _eri_slab(positions, basis, l0, ls):
+    """(N, N, N, ls) slab of the ERI tensor: all (ij|kl) with l in
+    [l0, l0+ls).  Mirrors ``hf_ref.eri_tensor`` with the second pair's l
+    index restricted (``l0`` may be traced; ``ls`` is static)."""
+    N = positions.shape[0]
+    G2 = basis.ngauss ** 2
+    p, Pc, Kab = hf_ref._pair_tables(positions, basis)
+
+    def body(eri, ab):
+        a, b = ab // G2, ab % G2
+        pa, qb = p[a], p[b]
+        Pb = lax.dynamic_slice_in_dim(Pc[b], l0, ls, axis=1)   # (N, ls, 3)
+        Kb = lax.dynamic_slice_in_dim(Kab[b], l0, ls, axis=1)  # (N, ls)
+        pq_d2 = jnp.sum((Pc[a][:, :, None, None, :]
+                         - Pb[None, None, :, :, :]) ** 2, -1)
+        t = (pa * qb / (pa + qb)) * pq_d2
+        pref = hf_ref.TWO_PI_POW_2_5 / (pa * qb * jnp.sqrt(pa + qb))
+        eri = eri + (pref * hf_ref.boys_f0(t)
+                     * Kab[a][:, :, None, None] * Kb[None, None, :, :])
+        return eri, None
+
+    eri0 = jnp.zeros((N, N, N, ls), positions.dtype)
+    eri, _ = lax.scan(body, eri0, jnp.arange(G2 * G2))
+    return eri
+
+
+@functools.lru_cache(maxsize=None)
+def _fock_sharded(num_shards, ngauss):
+    mesh = shard_mesh(num_shards)
+
+    def local(positions, density):
+        basis = hf_ref.sto_basis(ngauss, positions.dtype)
+        N = positions.shape[0]
+        ls = N // num_shards
+        l0 = lax.axis_index(AXIS) * ls
+        eri = _eri_slab(positions, basis, l0, ls)
+        d_slab = lax.dynamic_slice_in_dim(density, l0, ls, axis=1)
+        # F[i,j] = sum_kl D[k,l] (2 (ij|kl) - (ik|jl)); both terms read
+        # the same l-slab, so each device owns a disjoint set of quartet
+        # contributions and psum replaces the paper's atomic scatter-adds
+        j_term = 2.0 * jnp.einsum("ijkl,kl->ij", eri, d_slab)
+        k_term = jnp.einsum("ikjl,kl->ij", eri, d_slab)
+        return lax.psum(j_term - k_term, AXIS)
+
+    return jax.jit(shard_map(local, mesh, in_specs=(P(), P()),
+                             out_specs=P()))
+
+
+def fock_shard(positions, density, *, ngauss: int = 3,
+               num_shards: Optional[int] = None):
+    """Distributed two-electron Fock build (quartets sharded over l)."""
+    s = resolve_num_shards(positions.shape[0], num_shards)
+    return _fock_sharded(s, ngauss)(positions, density)
+
+
+# --------------------------------------------------------------------------
+# registration: plug into the existing PortableKernel registry
+# --------------------------------------------------------------------------
+def register_sharded_backends() -> None:
+    """Attach ``xla_shard`` backends + ``num_shards`` tunables to every
+    science-kernel family already in the registry.  Idempotent."""
+    k = get_kernel("stencil7")
+    if SHARD_BACKEND not in k.backends:
+        k.add_backend(SHARD_BACKEND, laplacian_shard, available=multi_device)
+        k.declare_tunables(
+            SHARD_BACKEND, num_shards=SHARD_GRID,
+            constraint=lambda p, u, *a, **kw:
+                _shard_ok(p["num_shards"], u.shape[0]))
+
+    for op, fn in stream_shard_fns().items():
+        k = get_kernel(f"babelstream.{op}")
+        if SHARD_BACKEND in k.backends:
+            continue
+        k.add_backend(SHARD_BACKEND, fn, available=multi_device)
+        k.declare_tunables(
+            SHARD_BACKEND, num_shards=SHARD_GRID,
+            constraint=lambda p, *arrays, **kw:
+                _shard_ok(p["num_shards"], arrays[0].shape[0]))
+
+    k = get_kernel("minibude.fasten")
+    if SHARD_BACKEND not in k.backends:
+        k.add_backend(SHARD_BACKEND, fasten_shard, available=multi_device)
+        k.declare_tunables(
+            SHARD_BACKEND, num_shards=SHARD_GRID,
+            constraint=lambda p, *deck, **kw:
+                _shard_ok(p["num_shards"], deck[4].shape[1]))
+
+    k = get_kernel("hartree_fock.twoel")
+    if SHARD_BACKEND not in k.backends:
+        k.add_backend(SHARD_BACKEND, fock_shard, available=multi_device)
+        k.declare_tunables(
+            SHARD_BACKEND, num_shards=SHARD_GRID,
+            constraint=lambda p, positions, *a, **kw:
+                _shard_ok(p["num_shards"], positions.shape[0]))
+
+
+# importing the ops modules (not the package, to stay cycle-safe when
+# repro.kernels.__init__ imports this module last) registers the base
+# kernels; we then attach the sharded backends on top
+import repro.kernels.babelstream.ops  # noqa: E402,F401
+import repro.kernels.hartree_fock.ops  # noqa: E402,F401
+import repro.kernels.minibude.ops  # noqa: E402,F401
+import repro.kernels.stencil7.ops  # noqa: E402,F401
+
+register_sharded_backends()

@@ -1,0 +1,183 @@
+"""Multi-device self-test for the domain-decomposition subsystem.
+
+    PYTHONPATH=src python -m repro.distributed.selftest [--devices 8]
+
+Runs on simulated host devices (``hostsim`` appends
+``--xla_force_host_platform_device_count`` before jax initializes — an
+XLA_FLAGS value you already exported is respected).  The test suite invokes
+this module in a subprocess (``tests/test_distributed_domain.py``) because
+pytest's process has already pinned jax to the 1-device topology.
+
+Checks, each against the single-device ``xla`` oracle:
+  * stencil7 slab decomposition is **bitwise identical** at 2/4/8 shards;
+  * the halo exchange round-trips shard-boundary planes (zeros at the open
+    ends);
+  * BabelStream copy/mul/add/triad are bitwise identical; ``dot`` matches
+    within fp32 reduction tolerance (psum changes the summation order);
+  * miniBUDE pose-parallel energies are bitwise identical;
+  * Hartree-Fock psum-accumulated Fock matrices match within oracle
+    tolerance;
+  * divisibility / device-count constraints raise ``ValueError`` and the
+    autotuner sweeps ``num_shards`` through the unchanged registry path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _check_stencil(np, jnp, get_kernel, shard_counts):
+    k = get_kernel("stencil7")
+    u = jnp.asarray(np.random.default_rng(0).standard_normal((16, 16, 32)),
+                    jnp.float32)
+    want = np.asarray(k(u, backend="xla"))
+    for s in shard_counts:
+        got = np.asarray(k(u, backend="xla_shard", num_shards=s))
+        assert np.array_equal(want, got), \
+            f"stencil7 xla_shard num_shards={s} is not bitwise equal"
+    # default shard-count resolution also matches
+    got = np.asarray(k(u, backend="xla_shard"))
+    assert np.array_equal(want, got), "stencil7 auto num_shards mismatch"
+    print(f"  stencil7: bitwise equal at shards {shard_counts} + auto")
+
+
+def _check_halo_exchange(np, jnp, n_shards):
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import collectives
+    from repro.distributed.domain import AXIS, shard_mesh
+
+    rows = 2 * n_shards
+    x = jnp.arange(rows * 3, dtype=jnp.float32).reshape(rows, 3)
+
+    def local(u):
+        lo, hi = collectives.halo_exchange(u, AXIS, n_shards, axis=0)
+        return jnp.concatenate([lo, hi], axis=0)
+
+    halos = np.asarray(jax.jit(shard_map(
+        local, shard_mesh(n_shards), in_specs=P(AXIS),
+        out_specs=P(AXIS)))(x))
+    xs = np.asarray(x).reshape(n_shards, 2, 3)
+    halos = halos.reshape(n_shards, 2, 3)
+    for i in range(n_shards):
+        want_lo = xs[i - 1][-1] if i > 0 else np.zeros(3)
+        want_hi = xs[i + 1][0] if i < n_shards - 1 else np.zeros(3)
+        assert np.array_equal(halos[i][0], want_lo), f"halo from_prev {i}"
+        assert np.array_equal(halos[i][1], want_hi), f"halo from_next {i}"
+    print(f"  halo_exchange: round-trips at {n_shards} shards, "
+          f"zero at the open ends")
+
+
+def _check_babelstream(np, jnp, get_kernel, shard_counts):
+    r = np.random.default_rng(1)
+    n = 1 << 12
+    a = jnp.asarray(r.standard_normal(n), jnp.float32)
+    b = jnp.asarray(r.standard_normal(n), jnp.float32)
+    cases = {"copy": (a,), "mul": (a,), "add": (a, b), "triad": (a, b),
+             "dot": (a, b)}
+    for op, args in cases.items():
+        k = get_kernel(f"babelstream.{op}")
+        want = np.asarray(k(*args, backend="xla"))
+        for s in shard_counts:
+            got = np.asarray(k(*args, backend="xla_shard", num_shards=s))
+            if op == "dot":
+                np.testing.assert_allclose(got, want, rtol=1e-6)
+            else:
+                assert np.array_equal(want, got), \
+                    f"babelstream.{op} num_shards={s} not bitwise equal"
+    print(f"  babelstream: copy/mul/add/triad bitwise equal, dot within "
+          f"1e-6, shards {shard_counts}")
+
+
+def _check_minibude(np, jnp, get_kernel, shard_counts):
+    from repro.kernels.minibude import ops as mb_ops
+    deck = mb_ops.make_deck(natpro=16, natlig=4, nposes=128, seed=0)
+    k = get_kernel("minibude.fasten")
+    want = np.asarray(k(*deck, backend="xla"))
+    for s in shard_counts:
+        got = np.asarray(k(*deck, backend="xla_shard", num_shards=s))
+        assert np.array_equal(want, got), \
+            f"minibude.fasten num_shards={s} not bitwise equal"
+    print(f"  minibude: pose-parallel bitwise equal at shards "
+          f"{shard_counts}")
+
+
+def _check_hartree_fock(np, jnp, get_kernel, shard_counts):
+    from repro.kernels.hartree_fock import ref as hf_ref
+    pos, dens = hf_ref.helium_lattice(8), hf_ref.initial_density(8)
+    k = get_kernel("hartree_fock.twoel")
+    want = np.asarray(k(pos, dens, backend="xla"))
+    for s in shard_counts:
+        got = np.asarray(k(pos, dens, backend="xla_shard", num_shards=s))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    print(f"  hartree_fock: psum Fock within oracle tolerance at shards "
+          f"{shard_counts}")
+
+
+def _check_constraints(np, jnp, get_kernel):
+    from repro.core import tuning
+    from repro.distributed.domain import resolve_num_shards
+
+    for bad in ({"extent": 15, "num_shards": 2},    # indivisible
+                {"extent": 16, "num_shards": 1},    # < 2
+                {"extent": 16, "num_shards": 1024}):  # > devices
+        try:
+            resolve_num_shards(bad["extent"], bad["num_shards"])
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"resolve_num_shards accepted {bad}")
+
+    # the declared tunable grid only admits valid (divisible, in-budget)
+    # shard counts, and tune() sweeps it through the unchanged registry path
+    k = get_kernel("stencil7")
+    u = jnp.asarray(np.random.default_rng(2).standard_normal((4, 8, 16)),
+                    jnp.float32)
+    pts = k.tunable_space("xla_shard").valid_points(u)
+    assert [p["num_shards"] for p in pts] == [2, 4], pts
+    r = tuning.tune(k, u, backend="xla_shard", iters=1, warmup=0)
+    assert r.skipped is None and r.params["num_shards"] in (2, 4), r
+    print("  constraints: invalid shard counts rejected, tunable grid "
+          "filtered, tune() sweeps num_shards")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=8)
+    args = ap.parse_args(argv)
+
+    # must precede the first jax device query
+    from repro.launch.hostsim import ensure_host_device_count
+    ensure_host_device_count(args.devices)
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    import repro.kernels  # noqa: F401  (registers xla_shard backends)
+    from repro.core.portable import get_kernel
+
+    n = jax.device_count()
+    if n < 2:
+        print(f"selftest needs >= 2 devices, got {n} (is XLA_FLAGS already "
+              f"forcing a 1-device topology?)", file=sys.stderr)
+        return 2
+    shard_counts = [s for s in (2, 4, 8) if s <= n]
+    print(f"selftest on {n} simulated {jax.devices()[0].platform} devices, "
+          f"shard counts {shard_counts}")
+
+    _check_stencil(np, jnp, get_kernel, shard_counts)
+    _check_halo_exchange(np, jnp, min(4, n))
+    _check_babelstream(np, jnp, get_kernel, shard_counts)
+    _check_minibude(np, jnp, get_kernel, shard_counts)
+    _check_hartree_fock(np, jnp, get_kernel, shard_counts)
+    _check_constraints(np, jnp, get_kernel)
+    print("selftest ok")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

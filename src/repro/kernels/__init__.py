@@ -10,3 +10,7 @@ import repro.kernels.minibude.ops  # noqa: F401
 import repro.kernels.hartree_fock.ops  # noqa: F401
 import repro.kernels.flash_attention.ops  # noqa: F401
 import repro.kernels.rwkv6.ops  # noqa: F401
+
+# last (it imports the ops modules above): attaches the multi-device
+# `xla_shard` backends + num_shards tunables to the science families
+import repro.distributed.domain  # noqa: F401

@@ -1,5 +1,10 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.hostsim import ensure_host_device_count
+
+# append to (never clobber) any user-set XLA_FLAGS; an explicit
+# --xla_force_host_platform_device_count from the user is respected
+ensure_host_device_count(512)
 
 """Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
 

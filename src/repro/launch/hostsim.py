@@ -1,0 +1,52 @@
+"""Simulated multi-device host topology via XLA_FLAGS — jax-import-safe.
+
+``--xla_force_host_platform_device_count=N`` makes the CPU backend expose N
+devices, which is how ``launch/dryrun.py`` compiles 512-chip meshes and how
+the distributed subsystem (``repro.distributed``) and the scaling benchmark
+run multi-device on a laptop.  The flag is only read at jax *backend init*,
+so it must land in ``os.environ`` before the first device query — this
+module therefore never imports jax.
+
+Two contracts, both preserving every other flag the user set:
+
+  * ``ensure_host_device_count(n)`` mutates ``os.environ`` in place for the
+    *current* process (call before importing jax).  An existing
+    ``--xla_force_host_platform_device_count`` in ``XLA_FLAGS`` is
+    respected, never overwritten — the user's explicit topology wins.
+  * ``merged_xla_flags(n, env)`` is the pure variant: returns the merged
+    flag string without touching anything (for ``subprocess`` env dicts).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Mapping, MutableMapping, Optional
+
+__all__ = ["DEVICE_COUNT_FLAG", "merged_xla_flags",
+           "ensure_host_device_count"]
+
+DEVICE_COUNT_FLAG = "--xla_force_host_platform_device_count"
+
+
+def merged_xla_flags(n: int, env: Optional[Mapping[str, str]] = None) -> str:
+    """The XLA_FLAGS value that forces ``n`` host devices while keeping every
+    flag already present in ``env``.  If the device-count flag is already
+    set, the existing value is respected (returned unchanged)."""
+    if env is None:
+        env = os.environ
+    flags = env.get("XLA_FLAGS", "")
+    if DEVICE_COUNT_FLAG in flags:
+        return flags
+    return (flags + " " if flags else "") + f"{DEVICE_COUNT_FLAG}={n}"
+
+
+def ensure_host_device_count(
+        n: int, env: Optional[MutableMapping[str, str]] = None) -> str:
+    """Append the device-count flag to ``env['XLA_FLAGS']`` (default
+    ``os.environ``) unless one is already present; returns the final value.
+    Must run before jax initializes its backends."""
+    if env is None:
+        env = os.environ
+    flags = merged_xla_flags(n, env)
+    env["XLA_FLAGS"] = flags
+    return flags

@@ -145,8 +145,10 @@ def test_cache_put_merges_on_disk_entries(tmp_path):
     a.put(key_a, {"block": 4}, 1e-6)
     b.put(key_b, {"block": 8}, 2e-6)
     fresh = tuning.TuningCache(path=path)
-    assert fresh.get(key_a) == {"params": {"block": 4}, "seconds": 1e-6}
-    assert fresh.get(key_b) == {"params": {"block": 8}, "seconds": 2e-6}
+    assert fresh.get(key_a) == {"params": {"block": 4}, "seconds": 1e-6,
+                                "search": "exhaustive"}
+    assert fresh.get(key_b) == {"params": {"block": 8}, "seconds": 2e-6,
+                                "search": "exhaustive"}
 
 
 def test_tuning_key_separates_shape_dtype_backend():
@@ -156,6 +158,20 @@ def test_tuning_key_separates_shape_dtype_backend():
     k3 = tuning.make_key(k, jnp.ones(16, jnp.bfloat16), backend="fast")
     k4 = tuning.make_key(k, jnp.ones(16), backend="xla")
     assert len({k1.as_str(), k2.as_str(), k3.as_str(), k4.as_str()}) == 4
+
+
+def test_tuning_key_separates_device_count(monkeypatch):
+    """num_shards tuned under 8 devices must not be replayed on a 2-device
+    host — the key carries the device count."""
+    k = _toy_kernel({"n": 0})
+    x = jnp.ones(16)
+    k1 = tuning.make_key(k, x, backend="fast")
+    forced = k1.devices + 7
+    monkeypatch.setattr(tuning.jax, "device_count", lambda: forced,
+                        raising=True)
+    k2 = tuning.make_key(k, x, backend="fast")
+    assert k1.devices != k2.devices
+    assert k1.as_str() != k2.as_str()
 
 
 def test_constraint_filters_sweep_points():
@@ -195,6 +211,220 @@ def test_call_tuned_uses_cached_params(tmp_path):
     # explicit kwargs always win over the cache
     k(x, backend="fast", tuned=True, tuning_cache=cache, block=4)
     assert seen[-1] == 4
+
+
+# --------------------------------------------------------------------------
+# cache invalidation on kernel-code change (schema v2)
+# --------------------------------------------------------------------------
+def test_cache_key_embeds_backend_code_hash():
+    """Editing a backend's body must change its tuning key — stale tuned
+    params must not survive kernel edits."""
+    k1 = PortableKernel(name="codehash")
+    k1.add_backend("fast", lambda x, *, block=8: x + x)
+    k2 = PortableKernel(name="codehash")
+    k2.add_backend("fast", lambda x, *, block=8: x * 2.0 + 0.0)
+    x = jnp.ones(16)
+    key1 = tuning.make_key(k1, x, backend="fast")
+    key2 = tuning.make_key(k2, x, backend="fast")
+    assert key1.code != key2.code
+    assert key1.as_str() != key2.as_str()
+    # identical code -> identical key (stable across calls)
+    assert tuning.make_key(k1, x, backend="fast").as_str() == key1.as_str()
+
+
+def test_code_hash_unwraps_jit_and_partial():
+    import functools as ft
+
+    import jax
+
+    def body(x, *, block=8):
+        return x + x
+
+    h = tuning.backend_code_hash(body)
+    assert tuning.backend_code_hash(jax.jit(body)) == h
+    assert tuning.backend_code_hash(
+        ft.partial(jax.jit(body), block=4)) == h
+
+
+def test_code_hash_sees_through_thin_wrappers(tmp_path, monkeypatch):
+    """Registered backends are mostly 3-line wrappers around a kernel
+    module; editing the *kernel body* must still change the hash."""
+    import importlib
+    import sys
+    import textwrap
+
+    # a /repro/-pathed package (the hash only follows repro source files)
+    # importable *beside* the real one: top-level name `fakekern`
+    pkg = tmp_path / "repro" / "fakekern"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+
+    def write_kernel(body):
+        (pkg / "kernel.py").write_text(textwrap.dedent(f"""
+            def laplacian(u):
+                return {body}
+        """))
+        (pkg / "ops.py").write_text(textwrap.dedent("""
+            from fakekern import kernel as K
+
+            def wrapper(u):
+                return K.laplacian(u)
+        """))
+
+    write_kernel("u + u")
+    monkeypatch.syspath_prepend(str(tmp_path / "repro"))
+    for mod in [m for m in sys.modules if m.startswith("fakekern")]:
+        del sys.modules[mod]
+    import fakekern.ops as ops
+    h1 = tuning.backend_code_hash(ops.wrapper)
+
+    write_kernel("u * 2.0")  # kernel edit; wrapper text unchanged
+    importlib.reload(sys.modules["fakekern.kernel"])
+    ops = importlib.reload(ops)
+    assert tuning.backend_code_hash(ops.wrapper) != h1
+    del sys.modules["fakekern"], sys.modules["fakekern.kernel"]
+    del sys.modules["fakekern.ops"]
+
+
+def test_code_hash_distinguishes_factory_closures():
+    """Factory-made wrappers share source; their closed-over constants
+    (which op they dispatch) must still separate the hashes."""
+    def make(op):
+        def run(x):
+            return x + 1 if op == "inc" else x - 1
+        return run
+
+    assert (tuning.backend_code_hash(make("inc"))
+            != tuning.backend_code_hash(make("dec")))
+    # the registered stream shards are exactly this shape
+    from repro.distributed.domain import stream_shard_fns
+    fns = stream_shard_fns()
+    assert (tuning.backend_code_hash(fns["copy"])
+            != tuning.backend_code_hash(fns["add"]))
+
+
+def test_edited_kernel_invalidates_cache_entry(tmp_path):
+    calls = {"n": 0}
+    cache = tuning.TuningCache(path=tmp_path / "tuning.json")
+    x = jnp.ones(16)
+
+    r1 = tuning.tune(_toy_kernel(calls), x, backend="fast", cache=cache,
+                     iters=1, warmup=0)
+    assert not r1.cached
+
+    edited = PortableKernel(name="toy")
+    edited.add_backend("xla", lambda x: x * 2.0)
+
+    def fast(x, *, block=8):
+        calls["n"] += 1
+        return x + x + 0.0  # the "edit"
+
+    edited.add_backend("fast", fast)
+    edited.declare_tunables("fast", block=(4, 8, 16))
+    r2 = tuning.tune(edited, x, backend="fast", cache=cache, iters=1,
+                     warmup=0)
+    assert not r2.cached  # code changed -> new key -> fresh sweep
+    assert len(cache) == 2
+
+
+def test_cache_v1_files_are_discarded(tmp_path):
+    """Pre-v2 cache files lack code-hash keys: loading must treat them as
+    empty (that IS the invalidation), and the next put writes v2."""
+    path = tmp_path / "tuning.json"
+    path.write_text(json.dumps({"old|key": {"params": {"block": 4},
+                                            "seconds": 1e-6}}))
+    k = _toy_kernel({"n": 0})
+    cache = tuning.TuningCache(path=path)
+    assert len(cache) == 0
+    key = tuning.make_key(k, jnp.ones(16), backend="fast")
+    assert cache.get(key) is None
+    cache.put(key, {"block": 8}, 2e-6)
+    raw = json.loads(path.read_text())
+    assert raw["schema"] == tuning.CACHE_SCHEMA
+    assert "old|key" not in raw["entries"]
+
+
+# --------------------------------------------------------------------------
+# budgeted coordinate descent (large grids)
+# --------------------------------------------------------------------------
+def _grid_kernel(cost):
+    """5x5 grid (> COORD_THRESHOLD) with a deterministic fake timer:
+    ``cost(point) -> seconds``.  Timing nondeterminism would make search-
+    behavior assertions flaky, so time_backend is replaced wholesale."""
+    k = PortableKernel(name="grid")
+    k.add_backend("xla", lambda x: x)
+    k.add_backend("fast", lambda x, *, block=4, rows=1: x + x)
+    k.declare_tunables("fast", block=(4, 8, 16, 32, 64),
+                       rows=(1, 2, 4, 8, 16))
+    timed = []
+    k.time_backend = lambda *a, backend, iters=3, warmup=1, **kw: (
+        timed.append((kw["block"], kw["rows"])),
+        cost(kw["block"], kw["rows"]))[1]
+    return k, timed
+
+
+def test_auto_switches_to_coordinate_descent_above_threshold():
+    assert 25 > tuning.COORD_THRESHOLD
+    # separable bowl with minimum at (16, 4): coordinate descent finds it
+    k, timed = _grid_kernel(lambda b, r: abs(b - 16) + 10 * abs(r - 4) + 1.0)
+    r = tuning.tune(k, jnp.ones(16), backend="fast")
+    assert r.search == "coordinate"
+    assert r.params == {"block": 16, "rows": 4}
+    budget = 2 * (5 + 5)
+    assert len(set(timed)) <= budget < 25  # never the exhaustive sweep
+    assert len(r.swept) == len(set(timed))
+
+
+def test_small_grids_stay_exhaustive_and_budget_is_honored():
+    k, timed = _grid_kernel(lambda b, r: 1.0)
+    r = tuning.tune(k, jnp.ones(16), backend="fast", search="exhaustive")
+    assert r.search == "exhaustive" and len(r.swept) == 25
+
+    k2, timed2 = _grid_kernel(lambda b, r: 1.0 / (b * r))
+    r2 = tuning.tune(k2, jnp.ones(16), backend="fast", search="coordinate",
+                     budget=3)
+    assert r2.search == "coordinate" and len(set(timed2)) <= 3
+
+    with pytest.raises(ValueError, match="search mode"):
+        tuning.tune(k, jnp.ones(16), backend="fast", search="bogus")
+
+
+def test_max_points_bounds_and_unpersists_coordinate_descent(tmp_path):
+    """The smoke lane's max_points must cap coordinate descent too, and a
+    max_points-bounded result must never reach the cache (same contract as
+    truncated exhaustive sweeps)."""
+    cache = tuning.TuningCache(path=tmp_path / "t.json")
+    k, timed = _grid_kernel(lambda b, r: 1.0 / (b * r))
+    r = tuning.tune(k, jnp.ones(16), backend="fast", cache=cache,
+                    max_points=2)  # auto -> coordinate (25 > threshold)
+    assert r.search == "coordinate"
+    assert len(set(timed)) <= 2
+    assert len(cache) == 0
+
+
+def test_coordinate_results_never_serve_exhaustive_requests(tmp_path):
+    """A budgeted search result is cached with provenance and must not
+    masquerade as the exhaustive optimum."""
+    cache = tuning.TuningCache(path=tmp_path / "t.json")
+    x = jnp.ones(16)
+    k, timed = _grid_kernel(lambda b, r: abs(b - 16) + abs(r - 4) + 1.0)
+
+    r1 = tuning.tune(k, x, backend="fast", cache=cache)  # auto -> coordinate
+    assert r1.search == "coordinate" and not r1.cached
+
+    # same mode -> served from cache
+    r2 = tuning.tune(k, x, backend="fast", cache=cache)
+    assert r2.cached and r2.search == "coordinate"
+
+    # exhaustive request ignores the budgeted entry, re-sweeps, overwrites
+    n_before = len(timed)
+    r3 = tuning.tune(k, x, backend="fast", cache=cache, search="exhaustive")
+    assert not r3.cached and r3.search == "exhaustive"
+    assert len(timed) == n_before + 25
+
+    # ... after which even exhaustive callers hit the cache
+    r4 = tuning.tune(k, x, backend="fast", cache=cache, search="exhaustive")
+    assert r4.cached and r4.search == "exhaustive"
 
 
 def test_registered_kernels_declare_tunable_spaces():
