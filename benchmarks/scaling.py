@@ -10,6 +10,15 @@ domain-decomposition subsystem registers (``repro.distributed.domain``):
   * **weak scaling** — fixed *per-shard* problem, global size grows with S:
       efficiency(S) = t_1(base) / t_S(S * base).
 
+stencil7 is measured once per *decomposition variant* — 1-D z slabs and 2-D
+``(sz, sy)`` pencils, each with and without halo/compute overlap — because
+the decomposition shape governs the surface-to-volume halo traffic that
+bounds a memory-bound stencil's efficiency.  Every timed point consults the
+PR-2 tuning cache first (Eq.-4 times *best* configurations, not defaults):
+cached parameters are merged under the point's forced shard settings and
+re-timed fresh — cached seconds never enter a ratio — and the artifact
+records the tuning provenance per point.
+
 Hartree-Fock has no linear weak-scaling axis (work is O(N^4) in the atom
 count) and records a skip reason instead of a fake curve.
 
@@ -18,26 +27,40 @@ Run on CPU via simulated devices, exactly how ``launch/dryrun.py`` fakes its
 device, the module re-execs itself in a subprocess with
 ``--xla_force_host_platform_device_count`` appended to XLA_FLAGS
 (``repro.launch.hostsim`` — a user-set value is respected, never clobbered).
-CPU caveat: "devices" are threads of one host, so efficiencies here validate
-the *machinery* and the shapes of the curves, not hardware scaling.
+The child's CSV rows are replayed into ``benchmarks.common.ROWS`` in the
+parent, so orchestrated runs (``benchmarks.run``) see them like any other
+module's.  CPU caveat: "devices" are threads of one host, so efficiencies
+here validate the *machinery* and the shapes of the curves, not hardware
+scaling.
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] --only scaling
     PYTHONPATH=src python -m benchmarks.scaling [--smoke] [--devices 8]
 
-Artifact schema (``repro.scaling/v1``)::
+Artifact schema (``repro.scaling/v2``; v1 had a single implicit slab curve
+per kernel and no tuning provenance)::
 
-    {"schema": "repro.scaling/v1", "platform": str, "smoke": bool,
+    {"schema": "repro.scaling/v2", "platform": str, "smoke": bool,
      "num_devices": int,
      "kernels": [
        {"kernel": str, "backend": "xla_shard", "baseline_backend": "xla",
         "skipped": str | null,
-        "strong": {"shape": str, "baseline_seconds": float,
-                   "points": [{"num_shards": int, "seconds": float,
-                               "speedup": float, "efficiency": float}]},
-        "weak": {"base_shape": str, "baseline_seconds": float,
-                 "points": [{"num_shards": int, "shape": str,
-                             "seconds": float, "efficiency": float}]}
-                | {"skipped": str}}]}
+        "curves": [
+          {"decomp": "slab" | "pencil", "overlap": bool,
+           "strong": {"shape": str, "baseline_seconds": float,
+                      "baseline_tuning": TUNING,
+                      "points": [{"num_shards": int,
+                                  "shard_grid": [sz, sy] | null,
+                                  "seconds": float, "speedup": float,
+                                  "efficiency": float, "tuning": TUNING}]},
+           "weak": {"base_shape": str, "baseline_seconds": float,
+                    "baseline_tuning": TUNING,
+                    "points": [{"num_shards": int,
+                                "shard_grid": [sz, sy] | null, "shape": str,
+                                "seconds": float, "efficiency": float,
+                                "tuning": TUNING}]}
+                   | {"skipped": str}}]}]}
+
+    TUNING = {"cached": bool, "params": {...}, "search": str | null}
 """
 
 from __future__ import annotations
@@ -47,23 +70,24 @@ import json
 import os
 import subprocess
 import sys
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Tuple
 
-from benchmarks.common import emit
+from benchmarks.common import emit, header
 
 ARTIFACT = "BENCH_scaling.json"
-SCHEMA = "repro.scaling/v1"
+SCHEMA = "repro.scaling/v2"
 DEFAULT_DEVICES = 8
+CSV_HEADER = "name,us_per_call,derived"
 
 
 # --------------------------------------------------------------------------
 # problem-size catalogue (global extents divisible by every swept shard count)
 # --------------------------------------------------------------------------
-def _stencil_args(nz, smoke):
+def _stencil_args(nz, smoke, ny_mult=1):
     import jax.numpy as jnp
     import numpy as np
     ny, nx = (16, 32) if smoke else (64, 128)
-    u = np.random.default_rng(0).standard_normal((nz, ny, nx))
+    u = np.random.default_rng(0).standard_normal((nz, ny * ny_mult, nx))
     return (jnp.asarray(u, jnp.float32),)
 
 
@@ -88,13 +112,19 @@ def _hf_args(natoms, smoke):
 
 
 #: kernel -> (strong extent, weak per-shard extent, args factory); extents
-#: are the decomposed axis (stencil z planes, stream elements, poses, atoms)
+#: are the decomposed axis (stencil z planes, stream elements, poses, atoms).
+#: stencil7 additionally declares its decomposition variants and a 2-D weak
+#: factory (weak pencils grow z by sz and y by sy, keeping the per-shard
+#: block fixed).
 def _catalogue(smoke: bool) -> Dict[str, Dict[str, Any]]:
     return {
         "stencil7": {
             "strong": 16 if smoke else 64,
             "weak": 2 if smoke else 8,
             "make": lambda n: _stencil_args(n, smoke),
+            "make_grid": lambda n, sy: _stencil_args(n, smoke, ny_mult=sy),
+            "curves": [("slab", False), ("slab", True),
+                       ("pencil", False), ("pencil", True)],
         },
         "babelstream.triad": {
             "strong": 1 << 14 if smoke else 1 << 20,
@@ -125,9 +155,31 @@ def _shape_sig(args) -> str:
     return shape_signature(*args)
 
 
-def _time(kernel, args, backend, iters, warmup, **kw) -> float:
-    return kernel.time_backend(*args, backend=backend, iters=iters,
-                               warmup=warmup, **kw)
+# --------------------------------------------------------------------------
+# timing: every point consults the tuning cache, re-times fresh, and records
+# provenance (the Eq.-4 "best configuration" rule from benchmarks/portability)
+# --------------------------------------------------------------------------
+def _timed_point(kernel, args, backend, cache, iters, warmup,
+                 forced: Dict[str, Any]) -> Tuple[float, Dict[str, Any]]:
+    """Median seconds at the cache's best params (merged *under* the forced
+    shard settings — the sweep axis always wins), plus the provenance
+    record.  Cached seconds are historical (another session, another load):
+    only the *parameters* are reused; the timing is always fresh."""
+    from repro.core import tuning
+
+    hit = cache.get(tuning.make_key(kernel, *args, backend=backend))
+    cached = tuning.params_from_cache(hit["params"]) if hit else {}
+    params = {**cached, **forced}
+    secs = kernel.time_backend(*args, backend=backend, iters=iters,
+                               warmup=warmup, **params)
+    provenance = {"cached": hit is not None,
+                  "params": dict(params),
+                  "search": hit.get("search", "exhaustive") if hit else None}
+    return secs, provenance
+
+
+def _curve_label(decomp: str, overlap: bool) -> str:
+    return decomp + ("+ov" if overlap else "")
 
 
 def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
@@ -135,9 +187,12 @@ def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
 
     import repro.kernels  # noqa: F401  (registers xla_shard backends)
     from repro.core.portable import registry
-    from repro.distributed.domain import SHARD_BACKEND
+    from repro.core.tuning import TuningCache
+    from repro.distributed.domain import (SHARD_BACKEND,
+                                          balanced_pencil_grid)
 
     dc = jax.device_count()
+    cache = TuningCache()
     shard_counts = [s for s in ((2, 4) if smoke else (2, 4, 8)) if s <= dc]
     iters, warmup = (1, 1) if smoke else (3, 1)
     records: List[Dict[str, Any]] = []
@@ -154,38 +209,93 @@ def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
             records.append(rec)
             continue
 
-        # strong: fixed global problem, shards grow
-        args = spec["make"](spec["strong"])
-        t1 = _time(kernel, args, kernel.oracle, iters, warmup)
-        points = []
-        for s in shard_counts:
-            ts = _time(kernel, args, SHARD_BACKEND, iters, warmup,
-                       num_shards=s)
-            eff = t1 / (s * ts)
-            points.append({"num_shards": s, "seconds": ts,
-                           "speedup": t1 / ts, "efficiency": eff})
-            emit(f"scaling.{name}.strong.s{s}", ts,
-                 f"eff={eff:.3f} speedup={t1 / ts:.2f}x")
-        rec["strong"] = {"shape": _shape_sig(args), "baseline_seconds": t1,
-                         "points": points}
+        curves = spec.get("curves") or [("slab", False)]
+        strong_args = spec["make"](spec["strong"])
+        t1, t1_prov = _timed_point(kernel, strong_args, kernel.oracle, cache,
+                                   iters, warmup, {})
+        weak_base = None
+        if spec["weak"] is not None:
+            weak_base = spec["make"](spec["weak"])
+            t1w, t1w_prov = _timed_point(kernel, weak_base, kernel.oracle,
+                                         cache, iters, warmup, {})
 
-        # weak: fixed per-shard problem, global grows with shards
-        if spec["weak"] is None:
-            rec["weak"] = {"skipped": spec["weak_skip"]}
-        else:
-            base_args = spec["make"](spec["weak"])
-            t1w = _time(kernel, base_args, kernel.oracle, iters, warmup)
+        rec["curves"] = []
+        for decomp, overlap in curves:
+            label = _curve_label(decomp, overlap)
+
+            def _point_plan(s, args):
+                """(shard_grid, forced kwargs) for S total shards, or None
+                when this decomposition cannot use S shards here.  ``args``
+                is the *fixed* global problem (strong lane); weak lanes
+                pass ``None`` and get the shape-agnostic grid — their
+                global extents are built *from* the grid, so they divide
+                by construction."""
+                if "curves" not in spec:       # 1-D kernels: num_shards
+                    return None, {"num_shards": s}
+                if decomp == "slab":
+                    grid = (s, 1)
+                    if args is not None and args[0].shape[0] % s:
+                        grid = None
+                elif args is not None:
+                    grid = balanced_pencil_grid(s, args[0].shape[0],
+                                                args[0].shape[1])
+                else:
+                    grid = balanced_pencil_grid(s)
+                if grid is None:
+                    return None, None
+                return grid, {"decomp": decomp, "shard_grid": grid,
+                              "overlap": overlap}
+
+            # strong: fixed global problem, shards grow
             points = []
             for s in shard_counts:
-                args_s = spec["make"](spec["weak"] * s)
-                ts = _time(kernel, args_s, SHARD_BACKEND, iters, warmup,
-                           num_shards=s)
-                eff = t1w / ts
-                points.append({"num_shards": s, "shape": _shape_sig(args_s),
-                               "seconds": ts, "efficiency": eff})
-                emit(f"scaling.{name}.weak.s{s}", ts, f"eff={eff:.3f}")
-            rec["weak"] = {"base_shape": _shape_sig(base_args),
-                           "baseline_seconds": t1w, "points": points}
+                grid, forced = _point_plan(s, strong_args)
+                if forced is None:
+                    continue
+                ts, prov = _timed_point(kernel, strong_args, SHARD_BACKEND,
+                                        cache, iters, warmup, forced)
+                eff = t1 / (s * ts)
+                points.append({"num_shards": s,
+                               "shard_grid": list(grid) if grid else None,
+                               "seconds": ts, "speedup": t1 / ts,
+                               "efficiency": eff, "tuning": prov})
+                emit(f"scaling.{name}.{label}.strong.s{s}", ts,
+                     f"eff={eff:.3f} speedup={t1 / ts:.2f}x")
+            curve: Dict[str, Any] = {
+                "decomp": decomp, "overlap": overlap,
+                "strong": {"shape": _shape_sig(strong_args),
+                           "baseline_seconds": t1,
+                           "baseline_tuning": t1_prov, "points": points}}
+
+            # weak: fixed per-shard problem, global grows with shards
+            if spec["weak"] is None:
+                curve["weak"] = {"skipped": spec["weak_skip"]}
+            else:
+                points = []
+                for s in shard_counts:
+                    grid, forced = _point_plan(s, None)
+                    if forced is None:
+                        continue
+                    if grid is not None and grid[1] > 1:
+                        args_s = spec["make_grid"](spec["weak"] * grid[0],
+                                                   grid[1])
+                    else:
+                        args_s = spec["make"](spec["weak"] * s)
+                    ts, prov = _timed_point(kernel, args_s, SHARD_BACKEND,
+                                            cache, iters, warmup, forced)
+                    eff = t1w / ts
+                    points.append({"num_shards": s,
+                                   "shard_grid": list(grid) if grid else None,
+                                   "shape": _shape_sig(args_s),
+                                   "seconds": ts, "efficiency": eff,
+                                   "tuning": prov})
+                    emit(f"scaling.{name}.{label}.weak.s{s}", ts,
+                         f"eff={eff:.3f}")
+                curve["weak"] = {"base_shape": _shape_sig(weak_base),
+                                 "baseline_seconds": t1w,
+                                 "baseline_tuning": t1w_prov,
+                                 "points": points}
+            rec["curves"].append(curve)
         records.append(rec)
 
     artifact = {
@@ -203,6 +313,25 @@ def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
 # --------------------------------------------------------------------------
 # entry points: re-exec under simulated devices when pinned to one
 # --------------------------------------------------------------------------
+def _replay_child_line(line: str) -> None:
+    """Feed one line of child stdout back through ``emit`` so the parent's
+    ``benchmarks.common.ROWS`` sees the child's CSV rows (the scaffold
+    aggregates ROWS, not raw stdout).  Header lines are dropped (the parent
+    context already printed one); anything non-CSV passes through."""
+    if not line or line == CSV_HEADER:
+        return
+    parts = line.split(",", 2)
+    if len(parts) == 3:
+        try:
+            us = float(parts[1])
+        except ValueError:
+            pass
+        else:
+            emit(parts[0], us / 1e6, parts[2])
+            return
+    print(line, flush=True)
+
+
 def run(smoke: bool = False, json_path: str = ARTIFACT,
         devices: int = DEFAULT_DEVICES) -> Dict[str, Any]:
     """Measure in-process when >= 2 devices are visible; otherwise re-exec
@@ -236,11 +365,15 @@ def run(smoke: bool = False, json_path: str = ARTIFACT,
            "--devices", str(devices)]
     if smoke:
         cmd.append("--smoke")
-    # child CSV rows stream through to our stdout (same scaffold contract)
-    proc = subprocess.run(
-        cmd, env=env,
+    # child CSV rows are replayed line-by-line into OUR emit/ROWS (not just
+    # streamed to stdout); stderr passes through untouched
+    proc = subprocess.Popen(
+        cmd, env=env, stdout=subprocess.PIPE, text=True,
         cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-    if proc.returncode:
+    assert proc.stdout is not None
+    for line in proc.stdout:
+        _replay_child_line(line.rstrip("\n"))
+    if proc.wait():
         raise RuntimeError(
             f"scaling subprocess failed with exit code {proc.returncode}")
     with open(json_path) as f:
@@ -253,6 +386,9 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default=ARTIFACT)
     ap.add_argument("--devices", type=int, default=DEFAULT_DEVICES)
     args = ap.parse_args(argv)
+    # standalone runs get the scaffold's CSV header line (benchmarks.run
+    # prints its own before dispatching, so run() itself must not)
+    header()
     run(smoke=args.smoke, json_path=args.json, devices=args.devices)
 
 

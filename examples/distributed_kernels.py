@@ -8,7 +8,10 @@ science family on its single-device oracle and on the ``xla_shard`` backend
 the domain-decomposition subsystem registered, checking the distributed
 result against the oracle:
 
-  * stencil7        1-D slab decomposition + ppermute halo exchange
+  * stencil7        1-D z slabs AND 2-D (sz, sy) pencils + per-axis ppermute
+                    halo exchange, each with the double-buffered
+                    halo/compute-overlap variant (interior computes while
+                    halos are in flight)
   * babelstream     block-partitioned triad (elementwise) + psum dot
   * minibude        pose-parallel energies
   * hartree_fock    l-slab quartet contributions accumulated with psum
@@ -37,20 +40,20 @@ from repro.kernels.hartree_fock import ref as hf_ref  # noqa: E402
 from repro.kernels.minibude import ops as mb_ops  # noqa: E402
 
 
-def show(name, kernel, args, num_shards, exact=True, **kw):
-    t_x = kernel.time_backend(*args, backend="xla", iters=3, **kw)
+def show(name, kernel, args, exact=True, label=None, **shard_kw):
+    t_x = kernel.time_backend(*args, backend="xla", iters=3)
     t_s = kernel.time_backend(*args, backend="xla_shard", iters=3,
-                              num_shards=num_shards, **kw)
-    want = np.asarray(kernel(*args, backend="xla", **kw))
-    got = np.asarray(kernel(*args, backend="xla_shard",
-                            num_shards=num_shards, **kw))
+                              **shard_kw)
+    want = np.asarray(kernel(*args, backend="xla"))
+    got = np.asarray(kernel(*args, backend="xla_shard", **shard_kw))
     if exact:
         assert np.array_equal(want, got), f"{name}: sharded != oracle"
         match = "bitwise"
     else:
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
         match = "~1e-4"
-    print(f"{name:18s} xla {t_x * 1e3:8.2f}ms   xla_shard[{num_shards}] "
+    label = label or ",".join(f"{k}={v}" for k, v in shard_kw.items())
+    print(f"{name:18s} xla {t_x * 1e3:8.2f}ms   xla_shard[{label}] "
           f"{t_s * 1e3:8.2f}ms   match: {match}")
 
 
@@ -66,21 +69,31 @@ def main() -> None:
     rng = np.random.default_rng(0)
 
     u = jnp.asarray(rng.standard_normal((32, 32, 64)), jnp.float32)
-    show("stencil7", get_kernel("stencil7"), (u,), shards)
+    s7 = get_kernel("stencil7")
+    show("stencil7", s7, (u,), label=f"slab {shards}x1",
+         num_shards=shards)
+    show("stencil7", s7, (u,), label=f"slab {shards}x1 +overlap",
+         num_shards=shards, overlap=True)
+    if n >= 4:
+        show("stencil7", s7, (u,), label="pencil 2x2", decomp="pencil",
+             shard_grid=(2, 2))
+        show("stencil7", s7, (u,), label="pencil 2x2 +overlap",
+             decomp="pencil", shard_grid=(2, 2), overlap=True)
 
     a = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
     b = jnp.asarray(rng.standard_normal(1 << 16), jnp.float32)
     show("babelstream.triad", get_kernel("babelstream.triad"), (a, b),
-         shards)
-    show("babelstream.dot", get_kernel("babelstream.dot"), (a, b), shards,
-         exact=False)
+         num_shards=shards)
+    show("babelstream.dot", get_kernel("babelstream.dot"), (a, b),
+         exact=False, num_shards=shards)
 
     deck = mb_ops.make_deck(natpro=32, natlig=4, nposes=256, seed=0)
-    show("minibude.fasten", get_kernel("minibude.fasten"), deck, shards)
+    show("minibude.fasten", get_kernel("minibude.fasten"), deck,
+         num_shards=shards)
 
     pos, dens = hf_ref.helium_lattice(8), hf_ref.initial_density(8)
     show("hartree_fock", get_kernel("hartree_fock.twoel"), (pos, dens),
-         shards, exact=False)
+         exact=False, num_shards=shards)
 
     print("\nevery sharded backend validated against its oracle; "
           "see BENCH_scaling.json for the efficiency curves")

@@ -60,6 +60,7 @@ __all__ = [
     "make_key",
     "shape_signature",
     "backend_code_hash",
+    "params_from_cache",
     "tune",
     "cached_best_params",
     "default_cache_path",
@@ -68,6 +69,18 @@ __all__ = [
 
 CACHE_ENV = "REPRO_TUNING_CACHE"
 CACHE_SCHEMA = "repro.tuning/v2"
+
+
+def params_from_cache(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Normalize a cached params dict for re-injection as call kwargs.
+
+    Tunable values may be tuples (the stencil's ``shard_grid=(sz, sy)``);
+    JSON has no tuple type, so they come back as lists.  Declared grids are
+    flat, so a shallow list->tuple conversion restores the declared value —
+    keeping cache-served params hashable and ``==`` to their swept twins.
+    """
+    return {k: tuple(v) if isinstance(v, list) else v
+            for k, v in params.items()}
 
 #: grids larger than this switch from exhaustive sweep to coordinate descent
 #: under ``search="auto"``
@@ -126,38 +139,98 @@ def _own_source(fn: Any) -> str:
         return code.co_code.hex() if code is not None else repr(fn)
 
 
+def _unwrap_callable(val: Any) -> Any:
+    """Peel ``functools.partial`` / ``__wrapped__`` chains (jit, lru_cache)
+    down to the underlying function; cycles and exotic wrappers fall back
+    to the value itself."""
+    for _ in range(16):
+        if isinstance(val, functools.partial):
+            val = val.func
+        elif getattr(val, "__wrapped__", None) is not None:
+            val = val.__wrapped__
+        else:
+            break
+    return val
+
+
+def _container_callables(val: Any) -> List[Any]:
+    """Callables sitting in a plain dict/tuple/list global (dispatch tables
+    like ``_STREAM_LOCAL`` map op names to (fn, ...) tuples)."""
+    if isinstance(val, dict):
+        vals = list(val.values())
+    elif isinstance(val, (list, tuple)):
+        vals = list(val)
+    else:
+        return []
+    out = []
+    for v in vals:
+        if isinstance(v, (list, tuple)):
+            out.extend(w for w in v if callable(w))
+        elif callable(v):
+            out.append(v)
+    return out
+
+
 def _referenced_file_hashes(fn: Any) -> List[str]:
     """sha1s of the repro source files a backend wrapper dispatches into.
 
     Registered backends are mostly thin wrappers (``laplacian_pallas`` is
-    three lines around ``K.laplacian_3d``), so hashing only their own
-    source would miss the kernel-body edits this key exists to catch.  For
-    every module/function the wrapper's code references by global name,
-    pull in the defining *file's* digest — editing kernel.py/ref.py then
+    three lines around ``K.laplacian_3d``; ``laplacian_shard`` dispatches
+    through an ``lru_cache``-wrapped shard_map builder), so hashing only
+    their own source would miss the kernel-body edits this key exists to
+    catch.  Starting from the wrapper's code, walk the modules/callables
+    its globals reference — unwrapping jit/lru_cache/partial layers and
+    looking inside plain dict/tuple dispatch tables — and pull in each
+    referenced repro *file's* digest, recursing (bounded) through
+    repro-defined functions so a wrapper -> cached builder -> kernel-ref
+    chain still reaches ref.py.  Editing any file on that chain then
     changes the wrapper's key even though the wrapper text didn't move.
-    One level deep on purpose: the file granularity already covers the
-    helpers those files call internally."""
+    Entries are keyed by repro-relative path so hosts sharing a cache via
+    $REPRO_TUNING_CACHE agree on the hash for byte-identical code."""
     code = getattr(fn, "__code__", None)
     if code is None:
         return []
-    parts: List[str] = []
     marker = os.sep + "repro" + os.sep
-    g = getattr(fn, "__globals__", {})
-    for name in code.co_names:
-        val = g.get(name)
-        path = None
+    digests: Dict[str, str] = {}
+    seen = set()
+    queue = [(code, getattr(fn, "__globals__", {}))]
+    budget = 64
+
+    def visit(val):
         if inspect.ismodule(val):
-            path = getattr(val, "__file__", None)
-        elif inspect.isfunction(val):
-            mod = inspect.getmodule(val)
+            path, target = getattr(val, "__file__", None), None
+        elif callable(val):
+            target = _unwrap_callable(val)
+            mod = inspect.getmodule(target)
             path = getattr(mod, "__file__", None) if mod else None
-        if path and marker in path:
+        else:
+            return
+        if not path or marker not in path:
+            return
+        # key by the repro-package-relative path: the hash must agree
+        # across checkouts/hosts sharing a cache, not encode where this
+        # clone happens to live
+        rel = path[path.rfind(marker) + 1:].replace(os.sep, "/")
+        if rel not in digests:
             try:
-                digest = hashlib.sha1(Path(path).read_bytes()).hexdigest()
+                digests[rel] = hashlib.sha1(
+                    Path(path).read_bytes()).hexdigest()
             except OSError:
-                continue
-            parts.append(f"{name}={digest}")
-    return parts
+                return
+        tcode = getattr(target, "__code__", None)
+        if tcode is not None and tcode not in seen:
+            seen.add(tcode)
+            queue.append((tcode, getattr(target, "__globals__", {})))
+
+    while queue and budget > 0:
+        budget -= 1
+        c, g = queue.pop(0)
+        for name in c.co_names:
+            val = g.get(name)
+            visit(val)
+            for v in _container_callables(val):
+                visit(v)
+    return sorted(f"{p}={d}" for p, d in digests.items())
 
 
 def backend_code_hash(fn: Any) -> str:
@@ -172,14 +245,7 @@ def backend_code_hash(fn: Any) -> str:
     hit = _CODE_HASHES.get(id(fn))
     if hit is not None and hit[0] is fn:
         return hit[1]
-    target, root = fn, fn
-    for _ in range(16):
-        if isinstance(target, functools.partial):
-            target = target.func
-        elif getattr(target, "__wrapped__", None) is not None:
-            target = target.__wrapped__
-        else:
-            break
+    target, root = _unwrap_callable(fn), fn
     parts = [_own_source(target)]
     code = getattr(target, "__code__", None)
     closure = getattr(target, "__closure__", None) or ()
@@ -423,7 +489,7 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
             if not (hit_search == "coordinate" and not coordinate):
                 return TuningResult(
                     kernel=kernel.name, backend=backend,
-                    params=dict(hit["params"]),
+                    params=params_from_cache(hit["params"]),
                     seconds=float(hit["seconds"]), swept=[], cached=True,
                     search=hit_search)
 
@@ -506,7 +572,7 @@ def cached_best_params(kernel: PortableKernel, *args: Any, backend: str,
     if cache is None:
         cache = _default_cache()
     hit = cache.get(make_key(kernel, *args, backend=backend, **kwargs))
-    return dict(hit["params"]) if hit else {}
+    return params_from_cache(hit["params"]) if hit else {}
 
 
 def tune_registered(name: str, *args: Any, backend: str,

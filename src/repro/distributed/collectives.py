@@ -2,17 +2,23 @@
 
 Everything here runs *inside* ``shard_map``-mapped functions, against a named
 mesh axis.  The helpers are deliberately minimal — they wrap ``lax.ppermute``
-/ ``lax.psum`` with the ring-permutation bookkeeping that every 1-D
+/ ``lax.psum`` with the ring-permutation bookkeeping that every block
 decomposition needs, and nothing else:
 
   * ``ring_perm(n, offset, wrap)`` builds the (src, dst) pairs for a shift
     along a ring of ``n`` shards.  Non-wrapping shifts leave the edge shards
     without a source, and ``lax.ppermute`` fills un-addressed outputs with
     zeros — exactly the zero Dirichlet halo the stencil oracle assumes.
+    ``wrap=True`` closes the ring (periodic boundaries).
   * ``shift(x, axis_name, n, offset)`` moves each shard's block ``offset``
     positions along the mesh axis.
-  * ``halo_exchange(u, axis_name, n)`` swaps boundary slabs with both
-    neighbours and returns ``(from_prev, from_next)`` halos.
+  * ``halo_exchange(u, axis_name, n)`` swaps ``halo``-thick boundary slabs
+    with both neighbours and returns ``(from_prev, from_next)`` halos.
+  * ``halo_exchange_nd`` runs one ``halo_exchange`` per *mesh* axis of a
+    named N-D mesh (e.g. ``("shards_z", "shards_y")`` for the 2-D pencil
+    decomposition): every helper here is mesh-axis-parametric, so a 2-D
+    decomposition is just two independent 1-D exchanges — the seven-point
+    stencil has no corner coupling.
   * ``psum`` is re-exported so kernel code imports one module for its
     communication vocabulary.
 
@@ -22,13 +28,13 @@ are Python-level metadata, not traced values.
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Sequence, Tuple
 
 import jax.numpy as jnp
 from jax import lax
 from jax.lax import psum  # noqa: F401  (re-export)
 
-__all__ = ["ring_perm", "shift", "halo_exchange", "psum"]
+__all__ = ["ring_perm", "shift", "halo_exchange", "halo_exchange_nd", "psum"]
 
 
 def ring_perm(n: int, offset: int = 1,
@@ -77,3 +83,26 @@ def halo_exchange(u: jnp.ndarray, axis_name: str, n: int, *, axis: int = 0,
     from_prev = shift(trailing, axis_name, n, offset=1, wrap=wrap)
     from_next = shift(leading, axis_name, n, offset=-1, wrap=wrap)
     return from_prev, from_next
+
+
+def halo_exchange_nd(
+        u: jnp.ndarray, axis_names: Sequence[str], ns: Sequence[int], *,
+        axes: Sequence[int] = (0, 1), halo: int = 1,
+        wrap: bool = False) -> Tuple[Tuple[jnp.ndarray, jnp.ndarray], ...]:
+    """One independent ``halo_exchange`` per named mesh axis.
+
+    ``axis_names[i]`` is the mesh axis along which array axis ``axes[i]`` is
+    decomposed (``ns[i]`` shards).  Returns one ``(from_prev, from_next)``
+    pair per mesh axis, in order.  All exchanges are issued on the *same*
+    input block, so a downstream consumer can overlap every ``ppermute``
+    with halo-free interior compute; halos do **not** include each other's
+    corners — fine for face-coupled stencils like the seven-point Laplacian,
+    which never reads diagonal neighbours.
+    """
+    if not (len(axis_names) == len(ns) == len(axes)):
+        raise ValueError(
+            f"axis_names/ns/axes must align, got {len(axis_names)}/"
+            f"{len(ns)}/{len(axes)}")
+    return tuple(
+        halo_exchange(u, name, n, axis=ax, halo=halo, wrap=wrap)
+        for name, n, ax in zip(axis_names, ns, axes))

@@ -6,11 +6,14 @@ run these same workloads across full exascale nodes).  This module supplies
 that axis: each science-kernel family gains an ``xla_shard`` backend that
 runs the oracle arithmetic under ``jax.shard_map`` over a 1-D device mesh —
 
-  * **stencil7** — 1-D slab decomposition along z with a one-plane
-    ``ppermute`` halo exchange (``collectives.halo_exchange``); each shard
-    applies the unchanged oracle stencil to its halo-padded slab, so the
-    sharded field is *bitwise identical* to the single-device result
-    (elementwise arithmetic, no cross-shard reductions);
+  * **stencil7** — tunable decomposition shape: 1-D z slabs or 2-D
+    ``(sz, sy)`` pencils over a named ``(shards_z, shards_y)`` mesh, with
+    per-axis ``ppermute`` halo exchange (``collectives.halo_exchange`` /
+    ``halo_exchange_nd``) and an ``overlap=True`` variant that issues the
+    halo traffic first, computes the halo-free interior while it is in
+    flight, and patches only the O(surface) boundary planes afterwards;
+    every variant applies the unchanged oracle arithmetic, so the sharded
+    field is *bitwise identical* to the single-device result;
   * **babelstream** — block-partitioned 1-D arrays; copy/mul/add/triad are
     embarrassingly parallel (bitwise identical), ``dot`` reduces each block
     locally in the accumulation dtype and combines partials with ``psum``;
@@ -53,10 +56,15 @@ from repro.kernels.stencil7 import ref as s7_ref
 
 __all__ = [
     "AXIS",
+    "AXIS_Z",
+    "AXIS_Y",
     "SHARD_BACKEND",
     "shard_mesh",
+    "shard_mesh2d",
     "multi_device",
     "resolve_num_shards",
+    "balanced_pencil_grid",
+    "resolve_shard_grid",
     "laplacian_shard",
     "stream_shard_fns",
     "fasten_shard",
@@ -64,12 +72,20 @@ __all__ = [
     "register_sharded_backends",
 ]
 
-#: mesh axis name every sharded kernel maps over
+#: mesh axis name every 1-D sharded kernel maps over
 AXIS = "shards"
+#: named axes of the 2-D pencil mesh (z outermost, matching array layout)
+AXIS_Z = "shards_z"
+AXIS_Y = "shards_y"
 #: registry backend name (xla arithmetic + sharding, hence the prefix)
 SHARD_BACKEND = "xla_shard"
-#: num_shards grid declared to the autotuner
+#: num_shards grid declared to the autotuner (1-D decompositions)
 SHARD_GRID = (2, 4, 8)
+#: stencil7 decomposition tunables: shape of the shard grid is a tunable,
+#: not a hard-coded choice (slab = (s, 1); pencil splits z AND y)
+STENCIL_DECOMPS = ("slab", "pencil")
+STENCIL_SHARD_GRIDS = ((2, 1), (4, 1), (8, 1), (2, 2), (4, 2), (2, 4))
+OVERLAP_GRID = (False, True)
 
 
 def multi_device() -> bool:
@@ -89,6 +105,18 @@ def shard_mesh(num_shards: int) -> Mesh:
             f"num_shards={num_shards} exceeds the {len(devices)} available "
             f"device(s)")
     return Mesh(np.array(devices[:num_shards]), (AXIS,))
+
+
+@functools.lru_cache(maxsize=None)
+def shard_mesh2d(sz: int, sy: int) -> Mesh:
+    """2-D ``(shards_z, shards_y)`` mesh over the first ``sz*sy`` devices."""
+    devices = jax.devices()
+    if sz * sy > len(devices):
+        raise ValueError(
+            f"shard grid ({sz}, {sy}) needs {sz * sy} devices, have "
+            f"{len(devices)}")
+    return Mesh(np.array(devices[:sz * sy]).reshape(sz, sy),
+                (AXIS_Z, AXIS_Y))
 
 
 def resolve_num_shards(extent: int, num_shards: Optional[int] = None,
@@ -128,39 +156,210 @@ def _shard_ok(num_shards: int, extent: int) -> bool:
             and extent % num_shards == 0)
 
 
-# --------------------------------------------------------------------------
-# stencil7: 1-D slab decomposition + halo exchange
-# --------------------------------------------------------------------------
-@functools.lru_cache(maxsize=None)
-def _stencil_sharded(num_shards, invhx2, invhy2, invhz2, invhxyz2):
-    mesh = shard_mesh(num_shards)
+def balanced_pencil_grid(total: int, nz: Optional[int] = None,
+                         ny: Optional[int] = None):
+    """Deterministic most-balanced ``(sz, sy)`` with ``sz * sy == total``
+    and both factors >= 2, optionally constrained to divide the ``nz``/
+    ``ny`` extents.  ``None`` when no such grid exists (e.g. total=2 has
+    no true 2-D grid).  Every factorization is considered (a short z axis
+    may only admit ``sy > sz``); ties prefer the z-major grid.  Single
+    source of the pencil-picking policy — the scaling benchmark's
+    recorded grids must match what the registry resolves."""
+    pairs = [(total // sy, sy) for sy in range(2, total // 2 + 1)
+             if total % sy == 0 and total // sy >= 2]
+    pairs.sort(key=lambda p: (abs(p[0] - p[1]), p[0] < p[1]))
+    for sz, sy in pairs:
+        if nz is not None and nz % sz:
+            continue
+        if ny is not None and ny % sy:
+            continue
+        return sz, sy
+    return None
 
-    def local(u):
-        # one-plane halos from both z-neighbours (zeros at the open ends)
-        lo, hi = collectives.halo_exchange(u, AXIS, num_shards, axis=0)
+
+def resolve_shard_grid(nz: int, ny: int, *, decomp: str = "slab",
+                       shard_grid=None, num_shards: Optional[int] = None,
+                       device_count: Optional[int] = None):
+    """Validate or pick the ``(sz, sy)`` shard grid for the stencil.
+
+    ``decomp="slab"`` decomposes z only (``sy == 1``; ``num_shards`` is the
+    legacy alias for ``sz``); ``decomp="pencil"`` splits z *and* y
+    (``sz, sy >= 2``).  A valid grid divides both decomposed extents and
+    fits in the device count.  With no explicit grid, slab reuses
+    ``resolve_num_shards`` and pencil deterministically picks the largest
+    total shard count, most-balanced grid first.
+    """
+    if decomp not in STENCIL_DECOMPS:
+        raise ValueError(
+            f"unknown decomp {decomp!r}; expected one of {STENCIL_DECOMPS}")
+    if device_count is None:
+        device_count = jax.device_count()
+    if shard_grid is None:
+        if decomp == "slab":
+            return resolve_num_shards(nz, num_shards, device_count), 1
+        totals = ([num_shards] if num_shards is not None
+                  else range(device_count, 3, -1))
+        for total in totals:
+            if total > device_count:
+                break
+            grid = balanced_pencil_grid(total, nz, ny)
+            if grid is not None:
+                return grid
+        raise ValueError(
+            f"no valid pencil grid for extents ({nz}, {ny}) on "
+            f"{device_count} device(s)"
+            + (f" with num_shards={num_shards}" if num_shards else ""))
+    sz, sy = (int(shard_grid[0]), int(shard_grid[1]))
+    if num_shards is not None and num_shards != sz * sy:
+        raise ValueError(
+            f"num_shards={num_shards} contradicts shard_grid=({sz}, {sy})")
+    if decomp == "slab" and sy != 1:
+        raise ValueError(f"slab decomposition needs sy=1, got sy={sy}")
+    if decomp == "pencil" and (sz < 2 or sy < 2):
+        raise ValueError(
+            f"pencil decomposition needs sz, sy >= 2, got ({sz}, {sy})")
+    if sz * sy < 2:
+        raise ValueError(f"shard grid ({sz}, {sy}) has fewer than 2 shards")
+    if sz * sy > device_count:
+        raise ValueError(
+            f"shard grid ({sz}, {sy}) needs {sz * sy} devices, have "
+            f"{device_count}")
+    if nz % sz or ny % sy:
+        raise ValueError(
+            f"shard grid ({sz}, {sy}) does not divide extents ({nz}, {ny})")
+    return sz, sy
+
+
+def _stencil_point_ok(p, nz: int, ny: int) -> bool:
+    """Tunable-space constraint twin of ``resolve_shard_grid``."""
+    try:
+        sz, sy = (int(x) for x in p["shard_grid"])
+    except (KeyError, TypeError, ValueError):
+        return False
+    if sz * sy < 2 or sz * sy > jax.device_count():
+        return False
+    if nz % sz or ny % sy:
+        return False
+    if p.get("decomp") == "pencil":
+        return sz >= 2 and sy >= 2
+    return sy == 1 and sz >= 2
+
+
+# --------------------------------------------------------------------------
+# stencil7: slab / pencil decomposition + (optionally overlapped) halo
+# exchange
+# --------------------------------------------------------------------------
+def _boundary_keep(extent, idx, n_shards):
+    """Per-plane keep mask along one decomposed axis: the first/last local
+    plane is zeroed on the shards owning the *global* boundary (the oracle
+    fixes boundary cells to 0; with one plane per shard the two edges are
+    the same plane and both conditions AND together)."""
+    return (jnp.ones((extent,), bool).at[0].set(idx != 0)
+            & jnp.ones((extent,), bool).at[-1].set(idx != n_shards - 1))
+
+
+def _slab_local(u, num_shards, coeffs, overlap):
+    """One shard of the 1-D slab decomposition (z split)."""
+    lo, hi = collectives.halo_exchange(u, AXIS, num_shards, axis=0)
+    if overlap and u.shape[0] >= 2:
+        # double-buffered: the ppermutes above have no data dependency on
+        # the interior stencil, so XLA overlaps the halo traffic with the
+        # O(volume) compute on the local buffer; only the two O(surface)
+        # boundary planes wait for the halos and get patched afterwards.
+        # Same per-element expression as the oracle -> bitwise equal.
+        out = s7_ref.laplacian(u, *coeffs)
+        lo_plane = s7_ref.laplacian(
+            jnp.concatenate([lo, u[:2]], axis=0), *coeffs)[1:2]
+        hi_plane = s7_ref.laplacian(
+            jnp.concatenate([u[-2:], hi], axis=0), *coeffs)[1:2]
+        out = out.at[:1].set(lo_plane).at[-1:].set(hi_plane)
+    else:
+        # one plane per shard has no halo-free interior: plain exchange
         padded = jnp.concatenate([lo, u, hi], axis=0)
-        # the oracle on the halo-padded slab: identical per-element
-        # arithmetic to the single-device backend, so interior planes are
-        # bitwise equal; its zero-padding already handles the y/x faces
-        out = s7_ref.laplacian(padded, invhx2, invhy2, invhz2,
-                               invhxyz2)[1:-1]
-        # global z-boundary planes are *boundary*, not interior-with-a-
-        # zero-halo: force them to the oracle's zero on the edge shards
-        idx = lax.axis_index(AXIS)
-        nz = out.shape[0]
-        keep = (jnp.ones((nz,), bool).at[0].set(idx != 0)
-                & jnp.ones((nz,), bool).at[-1].set(idx != num_shards - 1))
-        return jnp.where(keep[:, None, None], out, jnp.zeros_like(out))
+        out = s7_ref.laplacian(padded, *coeffs)[1:-1]
+    keep = _boundary_keep(out.shape[0], lax.axis_index(AXIS), num_shards)
+    return jnp.where(keep[:, None, None], out, jnp.zeros_like(out))
 
-    return jax.jit(shard_map(local, mesh, in_specs=P(AXIS),
-                             out_specs=P(AXIS)))
+
+def _pencil_local(u, sz, sy, coeffs, overlap):
+    """One shard of the 2-D pencil decomposition (z and y split)."""
+    if overlap and u.shape[0] >= 2 and u.shape[1] >= 2:
+        # all four ppermutes are issued on the raw block up front (the
+        # seven-point stencil has no corner coupling, so per-axis halos of
+        # the *unpadded* block suffice), the halo-free interior overlaps
+        # with them, and four thin O(surface) slabs patch the boundary.
+        (lo_z, hi_z), (lo_y, hi_y) = collectives.halo_exchange_nd(
+            u, (AXIS_Z, AXIS_Y), (sz, sy), axes=(0, 1))
+        out = s7_ref.laplacian(u, *coeffs)
+        uz = jnp.concatenate([lo_z, u, hi_z], axis=0)
+        uy = jnp.concatenate([lo_y, u, hi_y], axis=1)
+        # z-boundary planes: 3-plane slabs, middle plane's y-halos attached
+        # (its y-edge cells read the y-neighbour); the outer planes' y-pads
+        # are stencil-dead corners and stay zero
+        slab = jnp.pad(uz[0:3], ((0, 0), (1, 1), (0, 0)))
+        slab = slab.at[1:2, :1].set(lo_y[:1]).at[1:2, -1:].set(hi_y[:1])
+        z_lo = s7_ref.laplacian(slab, *coeffs)[1:2, 1:-1]
+        slab = jnp.pad(uz[-3:], ((0, 0), (1, 1), (0, 0)))
+        slab = slab.at[1:2, :1].set(lo_y[-1:]).at[1:2, -1:].set(hi_y[-1:])
+        z_hi = s7_ref.laplacian(slab, *coeffs)[1:2, 1:-1]
+        # y-boundary rows: 3-column slabs, middle column's z-halos attached
+        slab = jnp.pad(uy[:, 0:3], ((1, 1), (0, 0), (0, 0)))
+        slab = slab.at[:1, 1:2].set(lo_z[:, :1]).at[-1:, 1:2].set(
+            hi_z[:, :1])
+        y_lo = s7_ref.laplacian(slab, *coeffs)[1:-1, 1:2]
+        slab = jnp.pad(uy[:, -3:], ((1, 1), (0, 0), (0, 0)))
+        slab = slab.at[:1, 1:2].set(lo_z[:, -1:]).at[-1:, 1:2].set(
+            hi_z[:, -1:])
+        y_hi = s7_ref.laplacian(slab, *coeffs)[1:-1, 1:2]
+        # corner cells appear in both a z- and a y-patch; both compute the
+        # identical expression on identical values, so order is irrelevant
+        out = out.at[:1].set(z_lo).at[-1:].set(z_hi)
+        out = out.at[:, :1].set(y_lo).at[:, -1:].set(y_hi)
+    else:
+        # staged exchange: z first, then y on the z-padded block (the
+        # second exchange carries the corner rows for free)
+        lo_z, hi_z = collectives.halo_exchange(u, AXIS_Z, sz, axis=0)
+        uz = jnp.concatenate([lo_z, u, hi_z], axis=0)
+        lo_y, hi_y = collectives.halo_exchange(uz, AXIS_Y, sy, axis=1)
+        padded = jnp.concatenate([lo_y, uz, hi_y], axis=1)
+        out = s7_ref.laplacian(padded, *coeffs)[1:-1, 1:-1]
+    keep_z = _boundary_keep(out.shape[0], lax.axis_index(AXIS_Z), sz)
+    keep_y = _boundary_keep(out.shape[1], lax.axis_index(AXIS_Y), sy)
+    keep = keep_z[:, None, None] & keep_y[None, :, None]
+    return jnp.where(keep, out, jnp.zeros_like(out))
+
+
+@functools.lru_cache(maxsize=None)
+def _stencil_sharded(sz, sy, overlap, invhx2, invhy2, invhz2, invhxyz2):
+    coeffs = (invhx2, invhy2, invhz2, invhxyz2)
+    if sy == 1:
+        mesh, spec = shard_mesh(sz), P(AXIS)
+        local = functools.partial(_slab_local, num_shards=sz, coeffs=coeffs,
+                                  overlap=overlap)
+    else:
+        mesh, spec = shard_mesh2d(sz, sy), P(AXIS_Z, AXIS_Y)
+        local = functools.partial(_pencil_local, sz=sz, sy=sy, coeffs=coeffs,
+                                  overlap=overlap)
+    return jax.jit(shard_map(local, mesh, in_specs=spec, out_specs=spec))
 
 
 def laplacian_shard(u, invhx2=1.0, invhy2=1.0, invhz2=1.0, invhxyz2=-6.0,
-                    *, num_shards: Optional[int] = None):
-    """Slab-decomposed seven-point stencil (z axis split across devices)."""
-    s = resolve_num_shards(u.shape[0], num_shards)
-    return _stencil_sharded(s, invhx2, invhy2, invhz2, invhxyz2)(u)
+                    *, num_shards: Optional[int] = None,
+                    decomp: str = "slab", shard_grid=None,
+                    overlap: bool = False):
+    """Domain-decomposed seven-point stencil.
+
+    ``decomp="slab"`` splits z across ``num_shards`` devices (PR-3
+    behaviour); ``decomp="pencil"`` splits z and y across a
+    ``shard_grid=(sz, sy)`` device mesh.  ``overlap=True`` issues the halo
+    ``ppermute``s first, computes the halo-free interior while they are in
+    flight, then patches the boundary planes — all variants are bitwise
+    equal to the single-device oracle.
+    """
+    sz, sy = resolve_shard_grid(u.shape[0], u.shape[1], decomp=decomp,
+                                shard_grid=shard_grid, num_shards=num_shards)
+    return _stencil_sharded(sz, sy, bool(overlap), invhx2, invhy2, invhz2,
+                            invhxyz2)(u)
 
 
 # --------------------------------------------------------------------------
@@ -184,12 +383,20 @@ _STREAM_LOCAL = {
 
 
 @functools.lru_cache(maxsize=None)
-def _stream_sharded(op, num_shards, scalar):
+def _stream_sharded(op, num_shards):
     mesh = shard_mesh(num_shards)
     body, nargs, takes_scalar = _STREAM_LOCAL[op]
-    local = functools.partial(body, scalar=scalar) if takes_scalar else body
     out_spec = P() if op == "dot" else P(AXIS)
-    return jax.jit(shard_map(local, mesh, in_specs=(P(AXIS),) * nargs,
+    if takes_scalar:
+        # the scalar is a *traced*, replicated argument — baking it into
+        # this cache key would compile (and pin) one jitted program per
+        # distinct Python float
+        def local(*args):
+            return body(*args[:-1], scalar=args[-1])
+        in_specs = (P(AXIS),) * nargs + (P(),)
+    else:
+        local, in_specs = body, (P(AXIS),) * nargs
+    return jax.jit(shard_map(local, mesh, in_specs=in_specs,
                              out_specs=out_spec))
 
 
@@ -203,11 +410,12 @@ def _make_stream_shard(op, nargs, takes_scalar):
             elif scalar is None:
                 scalar = stream_ref.START_SCALAR
             s = resolve_num_shards(arrays[0].shape[0], num_shards)
-            return _stream_sharded(op, s, float(scalar))(*arrays)
+            return _stream_sharded(op, s)(
+                *arrays, jnp.asarray(scalar, arrays[0].dtype))
     else:
         def run(*arrays, num_shards: Optional[int] = None):
             s = resolve_num_shards(arrays[0].shape[0], num_shards)
-            return _stream_sharded(op, s, None)(*arrays)
+            return _stream_sharded(op, s)(*arrays)
     run.__name__ = f"{op}_shard"
     return run
 
@@ -307,10 +515,13 @@ def register_sharded_backends() -> None:
     k = get_kernel("stencil7")
     if SHARD_BACKEND not in k.backends:
         k.add_backend(SHARD_BACKEND, laplacian_shard, available=multi_device)
+        # the decomposition *shape* is a tunable, not a hard-coded choice:
+        # the sweep walks slab vs pencil grids and halo/compute overlap
         k.declare_tunables(
-            SHARD_BACKEND, num_shards=SHARD_GRID,
+            SHARD_BACKEND, decomp=STENCIL_DECOMPS,
+            shard_grid=STENCIL_SHARD_GRIDS, overlap=OVERLAP_GRID,
             constraint=lambda p, u, *a, **kw:
-                _shard_ok(p["num_shards"], u.shape[0]))
+                _stencil_point_ok(p, u.shape[0], u.shape[1]))
 
     for op, fn in stream_shard_fns().items():
         k = get_kernel(f"babelstream.{op}")

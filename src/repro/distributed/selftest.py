@@ -9,16 +9,22 @@ this module in a subprocess (``tests/test_distributed_domain.py``) because
 pytest's process has already pinned jax to the 1-device topology.
 
 Checks, each against the single-device ``xla`` oracle:
-  * stencil7 slab decomposition is **bitwise identical** at 2/4/8 shards;
+  * stencil7 slab decomposition is **bitwise identical** at 2/4/8 shards —
+    and so are the 2-D pencil grids ((2,2)/(4,2)/(2,4)) and the
+    halo/compute-overlap variants of both decompositions, including the
+    one-plane-per-shard edge case of the boundary mask;
   * the halo exchange round-trips shard-boundary planes (zeros at the open
-    ends);
+    ends), wraps periodically with ``wrap=True``, and moves ``halo``-thick
+    multi-plane slabs;
   * BabelStream copy/mul/add/triad are bitwise identical; ``dot`` matches
     within fp32 reduction tolerance (psum changes the summation order);
+    scalar ops trace the scalar (two scalars share one compiled program);
   * miniBUDE pose-parallel energies are bitwise identical;
   * Hartree-Fock psum-accumulated Fock matrices match within oracle
     tolerance;
   * divisibility / device-count constraints raise ``ValueError`` and the
-    autotuner sweeps ``num_shards`` through the unchanged registry path.
+    autotuner sweeps the decomp/shard-grid/overlap axes through the
+    unchanged registry path (tuple-valued tunables round-trip the cache).
 """
 
 from __future__ import annotations
@@ -40,6 +46,50 @@ def _check_stencil(np, jnp, get_kernel, shard_counts):
     got = np.asarray(k(u, backend="xla_shard"))
     assert np.array_equal(want, got), "stencil7 auto num_shards mismatch"
     print(f"  stencil7: bitwise equal at shards {shard_counts} + auto")
+
+
+def _check_stencil_pencil(np, jnp, get_kernel, n_devices):
+    if n_devices < 4:
+        print("  stencil7: pencil checks skipped (< 4 devices)")
+        return
+    k = get_kernel("stencil7")
+    u = jnp.asarray(np.random.default_rng(3).standard_normal((16, 16, 32)),
+                    jnp.float32)
+    want = np.asarray(k(u, backend="xla"))
+    grids = [g for g in ((2, 2), (4, 2), (2, 4))
+             if g[0] * g[1] <= n_devices]
+    for grid in grids:
+        for overlap in (False, True):
+            got = np.asarray(k(u, backend="xla_shard", decomp="pencil",
+                               shard_grid=grid, overlap=overlap))
+            assert np.array_equal(want, got), \
+                f"stencil7 pencil grid={grid} overlap={overlap} mismatch"
+    # slab overlap variant, and auto pencil-grid resolution
+    for s in (2, 4):
+        got = np.asarray(k(u, backend="xla_shard", decomp="slab",
+                           shard_grid=(s, 1), overlap=True))
+        assert np.array_equal(want, got), f"stencil7 slab+overlap s={s}"
+    got = np.asarray(k(u, backend="xla_shard", decomp="pencil"))
+    assert np.array_equal(want, got), "stencil7 auto pencil grid mismatch"
+    print(f"  stencil7: pencil grids {grids} and overlap variants "
+          f"bitwise equal")
+
+
+def _check_stencil_one_plane_per_shard(np, jnp, get_kernel, n_devices):
+    """nz == num_shards: each shard owns exactly one plane, so its first
+    and last local plane coincide and the boundary mask must AND the two
+    edge conditions rather than overwrite one with the other."""
+    k = get_kernel("stencil7")
+    s = min(8, n_devices)
+    u = jnp.asarray(np.random.default_rng(4).standard_normal((s, 8, 16)),
+                    jnp.float32)
+    want = np.asarray(k(u, backend="xla"))
+    for overlap in (False, True):
+        got = np.asarray(k(u, backend="xla_shard", num_shards=s,
+                           overlap=overlap))
+        assert np.array_equal(want, got), \
+            f"stencil7 one-plane-per-shard overlap={overlap} mismatch"
+    print(f"  stencil7: one plane per shard ({s} shards) bitwise equal")
 
 
 def _check_halo_exchange(np, jnp, n_shards):
@@ -71,6 +121,59 @@ def _check_halo_exchange(np, jnp, n_shards):
           f"zero at the open ends")
 
 
+def _check_halo_wrap_and_multiplane(np, jnp, n_shards):
+    """The wrap=True periodic ring and halo>1 multi-plane slabs."""
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed import collectives
+    from repro.distributed.domain import AXIS, shard_mesh
+
+    planes = 3
+    rows = planes * n_shards
+    x = jnp.arange(rows * 2, dtype=jnp.float32).reshape(rows, 2)
+    xs = np.asarray(x).reshape(n_shards, planes, 2)
+
+    def run(local):
+        return np.asarray(jax.jit(shard_map(
+            local, shard_mesh(n_shards), in_specs=P(AXIS),
+            out_specs=P(AXIS)))(x))
+
+    # periodic shift: every shard receives its predecessor's block, the
+    # first shard wrapping around to the last
+    shifted = run(lambda u: collectives.shift(u, AXIS, n_shards, offset=1,
+                                              wrap=True))
+    shifted = shifted.reshape(n_shards, planes, 2)
+    for i in range(n_shards):
+        assert np.array_equal(shifted[i], xs[(i - 1) % n_shards]), \
+            f"periodic shift shard {i}"
+
+    # halo=2 multi-plane exchange, open ends: the previous shard's trailing
+    # two planes / the next shard's leading two planes, zeros at the edges
+    halos = run(lambda u: jnp.concatenate(
+        collectives.halo_exchange(u, AXIS, n_shards, axis=0, halo=2),
+        axis=0)).reshape(n_shards, 4, 2)
+    for i in range(n_shards):
+        want_lo = xs[i - 1][-2:] if i > 0 else np.zeros((2, 2))
+        want_hi = xs[i + 1][:2] if i < n_shards - 1 else np.zeros((2, 2))
+        assert np.array_equal(halos[i][:2], want_lo), f"halo=2 prev {i}"
+        assert np.array_equal(halos[i][2:], want_hi), f"halo=2 next {i}"
+
+    # halo=2, periodic: the edge shards exchange with each other
+    halos = run(lambda u: jnp.concatenate(
+        collectives.halo_exchange(u, AXIS, n_shards, axis=0, halo=2,
+                                  wrap=True), axis=0))
+    halos = halos.reshape(n_shards, 4, 2)
+    for i in range(n_shards):
+        assert np.array_equal(halos[i][:2], xs[(i - 1) % n_shards][-2:]), \
+            f"wrap halo=2 prev {i}"
+        assert np.array_equal(halos[i][2:], xs[(i + 1) % n_shards][:2]), \
+            f"wrap halo=2 next {i}"
+    print(f"  halo_exchange: wrap=True periodic ring and halo=2 "
+          f"multi-plane slabs at {n_shards} shards")
+
+
 def _check_babelstream(np, jnp, get_kernel, shard_counts):
     r = np.random.default_rng(1)
     n = 1 << 12
@@ -90,6 +193,19 @@ def _check_babelstream(np, jnp, get_kernel, shard_counts):
                     f"babelstream.{op} num_shards={s} not bitwise equal"
     print(f"  babelstream: copy/mul/add/triad bitwise equal, dot within "
           f"1e-6, shards {shard_counts}")
+
+    # the scalar is traced, not baked into the compile cache: two distinct
+    # scalars must share one jitted program per (op, num_shards)
+    from repro.distributed import domain
+    k = get_kernel("babelstream.triad")
+    want = np.asarray(k(a, b, backend="xla", scalar=2.5))
+    got = np.asarray(k(a, b, backend="xla_shard", num_shards=2, scalar=2.5))
+    assert np.array_equal(want, got), "triad scalar=2.5 not bitwise equal"
+    size = domain._stream_sharded.cache_info().currsize
+    k(a, b, backend="xla_shard", num_shards=2, scalar=7.25)
+    assert domain._stream_sharded.cache_info().currsize == size, \
+        "a new scalar recompiled the sharded stream kernel"
+    print("  babelstream: scalar is traced (one compile serves all values)")
 
 
 def _check_minibude(np, jnp, get_kernel, shard_counts):
@@ -118,8 +234,11 @@ def _check_hartree_fock(np, jnp, get_kernel, shard_counts):
 
 
 def _check_constraints(np, jnp, get_kernel):
+    import tempfile
+
     from repro.core import tuning
-    from repro.distributed.domain import resolve_num_shards
+    from repro.distributed.domain import (resolve_num_shards,
+                                          resolve_shard_grid)
 
     for bad in ({"extent": 15, "num_shards": 2},    # indivisible
                 {"extent": 16, "num_shards": 1},    # < 2
@@ -131,17 +250,45 @@ def _check_constraints(np, jnp, get_kernel):
         else:
             raise AssertionError(f"resolve_num_shards accepted {bad}")
 
+    for kw in ({"decomp": "pencil", "shard_grid": (2, 1)},   # not 2-D
+                {"decomp": "slab", "shard_grid": (2, 2)},    # slab has sy=1
+                {"decomp": "pencil", "shard_grid": (2, 3)},  # 8 % 3 != 0
+                {"decomp": "pencil", "shard_grid": (64, 64)},  # > devices
+                {"decomp": "block"}):                        # unknown
+        try:
+            resolve_shard_grid(16, 8, **kw)
+        except ValueError:
+            pass
+        else:
+            raise AssertionError(f"resolve_shard_grid accepted {kw}")
+
     # the declared tunable grid only admits valid (divisible, in-budget)
-    # shard counts, and tune() sweeps it through the unchanged registry path
+    # points, and tune() sweeps the decomp/shard-grid/overlap axes through
+    # the unchanged registry path
     k = get_kernel("stencil7")
     u = jnp.asarray(np.random.default_rng(2).standard_normal((4, 8, 16)),
                     jnp.float32)
     pts = k.tunable_space("xla_shard").valid_points(u)
-    assert [p["num_shards"] for p in pts] == [2, 4], pts
-    r = tuning.tune(k, u, backend="xla_shard", iters=1, warmup=0)
-    assert r.skipped is None and r.params["num_shards"] in (2, 4), r
-    print("  constraints: invalid shard counts rejected, tunable grid "
-          "filtered, tune() sweeps num_shards")
+    grids = sorted({(p["decomp"], p["shard_grid"]) for p in pts})
+    assert grids == [("pencil", (2, 2)), ("pencil", (2, 4)),
+                     ("pencil", (4, 2)), ("slab", (2, 1)),
+                     ("slab", (4, 1))], grids
+    assert all({True, False} == {q["overlap"] for q in pts
+                                 if (q["decomp"], q["shard_grid"]) == g}
+               for g in grids)
+    with tempfile.TemporaryDirectory() as td:
+        cache = tuning.TuningCache(path=td + "/tuning.json")
+        r = tuning.tune(k, u, backend="xla_shard", cache=cache, iters=1,
+                        warmup=0)
+        assert r.skipped is None and not r.cached, r
+        assert r.params["decomp"] in ("slab", "pencil"), r
+        # tuple-valued shard_grid round-trips the JSON cache as a tuple
+        r2 = tuning.tune(k, u, backend="xla_shard", cache=cache, iters=1,
+                         warmup=0)
+        assert r2.cached and r2.params == r.params, (r, r2)
+        assert isinstance(r2.params["shard_grid"], tuple), r2
+    print("  constraints: invalid shard counts/grids rejected, tunable "
+          "grid filtered, tune() sweeps decomp/shard_grid/overlap")
 
 
 def main(argv=None) -> int:
@@ -170,7 +317,10 @@ def main(argv=None) -> int:
           f"shard counts {shard_counts}")
 
     _check_stencil(np, jnp, get_kernel, shard_counts)
+    _check_stencil_pencil(np, jnp, get_kernel, n)
+    _check_stencil_one_plane_per_shard(np, jnp, get_kernel, n)
     _check_halo_exchange(np, jnp, min(4, n))
+    _check_halo_wrap_and_multiplane(np, jnp, min(4, n))
     _check_babelstream(np, jnp, get_kernel, shard_counts)
     _check_minibude(np, jnp, get_kernel, shard_counts)
     _check_hartree_fock(np, jnp, get_kernel, shard_counts)

@@ -22,8 +22,11 @@ import repro.kernels  # noqa: F401  (registers xla_shard backends)
 from repro.core.portable import BackendUnavailableError, get_kernel
 from repro.core import tuning
 from repro.distributed import collectives
-from repro.distributed.domain import (SHARD_BACKEND, SHARD_GRID,
-                                      resolve_num_shards)
+from repro.distributed.domain import (OVERLAP_GRID, SHARD_BACKEND,
+                                      SHARD_GRID, STENCIL_DECOMPS,
+                                      STENCIL_SHARD_GRIDS,
+                                      resolve_num_shards,
+                                      resolve_shard_grid)
 from repro.launch import hostsim
 
 SHARDED_KERNELS = ["stencil7", "babelstream.copy", "babelstream.mul",
@@ -51,12 +54,21 @@ def _subprocess_env(devices=8):
 # registry wiring (1-device host: registered but unavailable)
 # --------------------------------------------------------------------------
 @pytest.mark.parametrize("name", SHARDED_KERNELS)
-def test_xla_shard_registered_with_num_shards_tunable(name):
+def test_xla_shard_registered_with_shard_tunables(name):
     k = get_kernel(name)
     assert SHARD_BACKEND in k.backends, name
     space = k.tunable_space(SHARD_BACKEND)
-    assert space is not None and "num_shards" in space.params
-    assert tuple(space.params["num_shards"]) == SHARD_GRID
+    assert space is not None
+    if name == "stencil7":
+        # the decomposition *shape* is the tunable axis: slab vs pencil
+        # grids plus halo/compute overlap
+        assert set(space.params) == {"decomp", "shard_grid", "overlap"}
+        assert tuple(space.params["decomp"]) == STENCIL_DECOMPS
+        assert tuple(space.params["shard_grid"]) == STENCIL_SHARD_GRIDS
+        assert tuple(space.params["overlap"]) == OVERLAP_GRID
+    else:
+        assert "num_shards" in space.params
+        assert tuple(space.params["num_shards"]) == SHARD_GRID
 
 
 @pytest.mark.skipif(jax.device_count() != 1,
@@ -96,6 +108,43 @@ def test_resolve_num_shards_validates_and_picks_largest():
         resolve_num_shards(7, None, device_count=4)  # 7 prime, > devices
 
 
+def test_resolve_shard_grid_validates_and_picks():
+    # explicit grids
+    assert resolve_shard_grid(16, 16, decomp="slab", shard_grid=(4, 1),
+                              device_count=8) == (4, 1)
+    assert resolve_shard_grid(16, 16, decomp="pencil", shard_grid=(2, 4),
+                              device_count=8) == (2, 4)
+    # slab auto falls back to resolve_num_shards semantics
+    assert resolve_shard_grid(16, 16, decomp="slab",
+                              device_count=8) == (8, 1)
+    assert resolve_shard_grid(16, 16, decomp="slab", num_shards=2,
+                              device_count=8) == (2, 1)
+    # pencil auto: largest total first, most balanced grid first
+    assert resolve_shard_grid(16, 16, decomp="pencil",
+                              device_count=8) == (4, 2)
+    assert resolve_shard_grid(16, 16, decomp="pencil", num_shards=4,
+                              device_count=8) == (2, 2)
+    with pytest.raises(ValueError, match="slab decomposition needs sy=1"):
+        resolve_shard_grid(16, 16, decomp="slab", shard_grid=(2, 2),
+                           device_count=8)
+    with pytest.raises(ValueError, match="pencil decomposition needs"):
+        resolve_shard_grid(16, 16, decomp="pencil", shard_grid=(4, 1),
+                           device_count=8)
+    with pytest.raises(ValueError, match="does not divide"):
+        resolve_shard_grid(16, 12, decomp="pencil", shard_grid=(2, 5),
+                           device_count=16)
+    with pytest.raises(ValueError, match="needs 16 devices"):
+        resolve_shard_grid(16, 16, decomp="pencil", shard_grid=(4, 4),
+                           device_count=8)
+    with pytest.raises(ValueError, match="contradicts"):
+        resolve_shard_grid(16, 16, decomp="pencil", shard_grid=(2, 2),
+                           num_shards=8, device_count=8)
+    with pytest.raises(ValueError, match="unknown decomp"):
+        resolve_shard_grid(16, 16, decomp="block", device_count=8)
+    with pytest.raises(ValueError, match="no valid pencil grid"):
+        resolve_shard_grid(15, 15, decomp="pencil", device_count=8)
+
+
 def test_ring_perm_shapes():
     assert collectives.ring_perm(4, 1) == [(0, 1), (1, 2), (2, 3)]
     assert collectives.ring_perm(4, -1) == [(1, 0), (2, 1), (3, 2)]
@@ -104,6 +153,24 @@ def test_ring_perm_shapes():
     assert collectives.ring_perm(1, 1) == []
     with pytest.raises(ValueError):
         collectives.ring_perm(0)
+
+
+def test_ring_perm_wrap_covers_every_shard():
+    # periodic rings keep all n pairs at any offset (mod n), including
+    # negative offsets and offsets beyond the ring
+    assert collectives.ring_perm(4, -1, wrap=True) == [(0, 3), (1, 0),
+                                                       (2, 1), (3, 2)]
+    assert collectives.ring_perm(3, 5, wrap=True) == [(0, 2), (1, 0),
+                                                      (2, 1)]
+    for n, offset in [(2, 1), (4, 2), (5, -2)]:
+        pairs = collectives.ring_perm(n, offset, wrap=True)
+        assert len(pairs) == n
+        assert sorted(d for _, d in pairs) == list(range(n))
+
+
+def test_halo_exchange_nd_validates_alignment():
+    with pytest.raises(ValueError, match="must align"):
+        collectives.halo_exchange_nd(jnp.ones((4, 4)), ("a", "b"), (2,))
 
 
 # --------------------------------------------------------------------------
@@ -162,6 +229,71 @@ def test_sharded_backends_match_single_device_under_8_devices():
     assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
     assert "selftest ok" in out.stdout
     assert "bitwise equal at shards [2, 4, 8]" in out.stdout
+    assert ("pencil grids [(2, 2), (4, 2), (2, 4)] and overlap variants "
+            "bitwise equal") in out.stdout
+    assert "one plane per shard (8 shards) bitwise equal" in out.stdout
+    assert "wrap=True periodic ring and halo=2" in out.stdout
+    assert "scalar is traced" in out.stdout
+    assert "tune() sweeps decomp/shard_grid/overlap" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# scaling benchmark: re-exec row replay + header (fast, no devices needed)
+# --------------------------------------------------------------------------
+def test_scaling_replays_child_rows_into_parent_rows(capsys):
+    """The re-exec path must feed child CSV rows back through emit() so the
+    parent's benchmarks.common.ROWS aggregates them (the regression: rows
+    only streamed through stdout and ROWS stayed empty)."""
+    from benchmarks import common, scaling
+
+    before = len(common.ROWS)
+    scaling._replay_child_line("scaling.x.slab.strong.s2,123.4,eff=0.5")
+    scaling._replay_child_line(scaling.CSV_HEADER)   # dropped, not doubled
+    scaling._replay_child_line("")                   # blank: dropped
+    scaling._replay_child_line("free-form progress note")  # passes through
+    rows = common.ROWS[before:]
+    assert len(rows) == 1
+    name, us, derived = rows[0]
+    assert name == "scaling.x.slab.strong.s2" and derived == "eff=0.5"
+    assert us == pytest.approx(123.4)
+    out = capsys.readouterr().out
+    assert "scaling.x.slab.strong.s2,123.4,eff=0.5" in out
+    assert "free-form progress note" in out
+    assert out.count(scaling.CSV_HEADER) == 0
+
+
+def test_scaling_standalone_main_emits_header(capsys, monkeypatch, tmp_path):
+    """`python -m benchmarks.scaling` must print the scaffold's CSV header
+    before its rows (benchmarks.run prints one itself, so run() must not)."""
+    from benchmarks import scaling
+
+    seen = {}
+    monkeypatch.setattr(scaling, "run", lambda **kw: seen.update(kw) or {})
+    scaling.main(["--smoke", "--json", str(tmp_path / "s.json")])
+    assert capsys.readouterr().out.splitlines()[0] == scaling.CSV_HEADER
+    assert seen["smoke"] is True
+
+
+def test_balanced_pencil_grid_policy():
+    """One picker serves the registry AND the scaling benchmark, so the
+    recorded per-point shard_grid always matches what the registry would
+    resolve."""
+    from repro.distributed.domain import balanced_pencil_grid
+
+    assert balanced_pencil_grid(4) == (2, 2)
+    assert balanced_pencil_grid(8) == (4, 2)
+    assert balanced_pencil_grid(2) is None            # no true 2-D grid
+    assert balanced_pencil_grid(4, 16, 16) == (2, 2)
+    assert balanced_pencil_grid(8, 16, 16) == (4, 2)
+    assert balanced_pencil_grid(8, 16, 3) is None     # ny % sy != 0
+    assert balanced_pencil_grid(2, 16, 16) is None
+    # a short z axis may only admit the sy-major factorization
+    assert balanced_pencil_grid(6, 2, 9) == (2, 3)
+    assert resolve_shard_grid(2, 9, decomp="pencil",
+                              device_count=6) == (2, 3)
+    # the registry's auto-resolution goes through the same picker
+    assert resolve_shard_grid(16, 16, decomp="pencil", num_shards=8,
+                              device_count=8) == balanced_pencil_grid(8)
 
 
 # --------------------------------------------------------------------------
@@ -169,22 +301,41 @@ def test_sharded_backends_match_single_device_under_8_devices():
 # --------------------------------------------------------------------------
 @pytest.mark.slow
 def test_scaling_benchmark_smoke_writes_artifact(tmp_path):
-    from benchmarks import scaling
+    from benchmarks import common, scaling
 
+    rows_before = len(common.ROWS)
     json_path = str(tmp_path / "BENCH_scaling.json")
     artifact = scaling.run(smoke=True, json_path=json_path, devices=4)
 
     on_disk = json.loads((tmp_path / "BENCH_scaling.json").read_text())
-    assert on_disk["schema"] == "repro.scaling/v1"
+    assert on_disk["schema"] == "repro.scaling/v2"
     assert on_disk["num_devices"] >= 2
     by_name = {r["kernel"]: r for r in artifact["kernels"]}
     for name in ("stencil7", "babelstream.triad", "babelstream.dot"):
         rec = by_name[name]
         assert rec["skipped"] is None
-        for lane in ("strong", "weak"):
-            pts = rec[lane]["points"]
-            assert pts and all(
-                np.isfinite(p["efficiency"]) and p["efficiency"] > 0
-                for p in pts)
+        for curve in rec["curves"]:
+            for lane in ("strong", "weak"):
+                pts = curve[lane]["points"]
+                assert pts and all(
+                    np.isfinite(p["efficiency"]) and p["efficiency"] > 0
+                    for p in pts)
+                # every point records its tuning provenance (PR-2 rules:
+                # params may come from the cache, the timing never does)
+                assert all(set(p["tuning"]) == {"cached", "params",
+                                                "search"} for p in pts)
+    # stencil7 carries the slab-vs-pencil decomposition axis
+    stencil = {(c["decomp"], c["overlap"]): c
+               for c in by_name["stencil7"]["curves"]}
+    assert set(stencil) == {("slab", False), ("slab", True),
+                            ("pencil", False), ("pencil", True)}
+    pencil_pts = stencil[("pencil", False)]["strong"]["points"]
+    assert [tuple(p["shard_grid"]) for p in pencil_pts] == [(2, 2)]
     # HF records a reason for its missing weak curve, never a fake one
-    assert "skipped" in by_name["hartree_fock.twoel"]["weak"]
+    assert "skipped" in by_name["hartree_fock.twoel"]["curves"][0]["weak"]
+    # the re-exec child's CSV rows were replayed into the parent's ROWS
+    new_rows = common.ROWS[rows_before:]
+    assert any(n.startswith("scaling.stencil7.pencil") for n, _, _ in
+               new_rows)
+    assert any(n.startswith("scaling.babelstream.dot") for n, _, _ in
+               new_rows)

@@ -214,6 +214,67 @@ def test_call_tuned_uses_cached_params(tmp_path):
 
 
 # --------------------------------------------------------------------------
+# tuple-valued tunables (the stencil's shard_grid=(sz, sy) axis)
+# --------------------------------------------------------------------------
+def _grid_valued_kernel(seen):
+    """A kernel whose tunable is a *tuple* (like the stencil's 2-D shard
+    grid) with a divisibility constraint over the concrete input."""
+    k = PortableKernel(name="tuplegrid")
+    k.add_backend("xla", lambda x: x)
+
+    def fast(x, *, grid=(2, 1)):
+        seen.append(tuple(grid))
+        return x + x
+
+    k.add_backend("fast", fast)
+    k.declare_tunables(
+        "fast", grid=((2, 1), (4, 1), (2, 2), (3, 2)),
+        constraint=lambda p, x, **kw: x.shape[0] % p["grid"][0] == 0)
+    return k
+
+
+def test_tuple_valued_tunables_sweep_and_constrain():
+    seen = []
+    k = _grid_valued_kernel(seen)
+    r = tuning.tune(k, jnp.ones(8), backend="fast", iters=1, warmup=0)
+    # (3, 2) violates the divisibility constraint and is never timed
+    assert [p["grid"] for p, _ in r.swept] == [(2, 1), (4, 1), (2, 2)]
+    assert r.params["grid"] in ((2, 1), (4, 1), (2, 2))
+    assert isinstance(r.params["grid"], tuple)
+
+
+def test_tuple_valued_params_round_trip_the_json_cache(tmp_path):
+    """JSON has no tuples: cached grid params come back as lists and must
+    be re-tupled before they are compared, hashed, or re-injected."""
+    seen = []
+    k = _grid_valued_kernel(seen)
+    cache = tuning.TuningCache(path=tmp_path / "t.json")
+    x = jnp.ones(8)
+
+    r1 = tuning.tune(k, x, backend="fast", cache=cache, iters=1, warmup=0)
+    assert not r1.cached
+
+    # a fresh cache object re-reads the persisted JSON (lists on disk)
+    fresh = tuning.TuningCache(path=tmp_path / "t.json")
+    r2 = tuning.tune(k, x, backend="fast", cache=fresh, iters=1, warmup=0)
+    assert r2.cached
+    assert r2.params == r1.params
+    assert isinstance(r2.params["grid"], tuple)
+
+    # the tuned-call path re-injects a tuple too
+    best = tuning.cached_best_params(k, x, backend="fast", cache=fresh)
+    assert best == r1.params and isinstance(best["grid"], tuple)
+    k(x, backend="fast", tuned=True, tuning_cache=fresh)
+    assert seen[-1] == r1.params["grid"]
+
+
+def test_params_from_cache_is_shallow_and_typed():
+    assert tuning.params_from_cache(
+        {"grid": [2, 4], "by": 8, "decomp": "pencil", "overlap": True}) == {
+            "grid": (2, 4), "by": 8, "decomp": "pencil", "overlap": True}
+
+
+# --------------------------------------------------------------------------
 # cache invalidation on kernel-code change (schema v2)
 # --------------------------------------------------------------------------
 def test_cache_key_embeds_backend_code_hash():
@@ -284,6 +345,70 @@ def test_code_hash_sees_through_thin_wrappers(tmp_path, monkeypatch):
     assert tuning.backend_code_hash(ops.wrapper) != h1
     del sys.modules["fakekern"], sys.modules["fakekern.kernel"]
     del sys.modules["fakekern.ops"]
+
+
+def test_code_hash_sees_through_lru_cache_dispatch(tmp_path, monkeypatch):
+    """The sharded backends dispatch through lru_cache-wrapped shard_map
+    builders; a kernel-body edit must still reach the hash through that
+    wrapper (the regression: lru_cache wrappers are not isfunction and the
+    walk stopped dead at them)."""
+    import importlib
+    import sys
+    import textwrap
+
+    pkg = tmp_path / "repro" / "fakecached"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+
+    def write_kernel(body):
+        (pkg / "kernel.py").write_text(textwrap.dedent(f"""
+            def laplacian(u):
+                return {body}
+        """))
+        (pkg / "ops.py").write_text(textwrap.dedent("""
+            import functools
+
+            from fakecached import kernel as K
+
+            @functools.lru_cache(maxsize=None)
+            def _build():
+                return K.laplacian
+
+            def wrapper(u):
+                return _build()(u)
+        """))
+
+    write_kernel("u + u")
+    monkeypatch.syspath_prepend(str(tmp_path / "repro"))
+    for mod in [m for m in sys.modules if m.startswith("fakecached")]:
+        del sys.modules[mod]
+    import fakecached.ops as ops
+    h1 = tuning.backend_code_hash(ops.wrapper)
+
+    write_kernel("u * 2.0")  # kernel edit; ops.py text unchanged
+    importlib.reload(sys.modules["fakecached.kernel"])
+    ops = importlib.reload(ops)
+    assert tuning.backend_code_hash(ops.wrapper) != h1
+    del sys.modules["fakecached"], sys.modules["fakecached.kernel"]
+    del sys.modules["fakecached.ops"]
+
+
+def test_code_hash_reaches_kernel_refs_from_sharded_backends():
+    """The registered xla_shard wrappers must hash the kernel ref files
+    they ultimately dispatch into (through lru_cache builders and the
+    _STREAM_LOCAL dispatch table), or editing a kernel would silently keep
+    serving its stale tuned shard params."""
+    import repro.kernels  # noqa: F401
+    from repro.distributed import domain
+
+    parts = tuning._referenced_file_hashes(domain.laplacian_shard)
+    assert any("stencil7" in p and "ref.py" in p for p in parts), parts
+    fns = domain.stream_shard_fns()
+    parts = tuning._referenced_file_hashes(fns["copy"])
+    assert any("babelstream" in p and "ref.py" in p for p in parts), parts
+    # keys are repro-relative, never absolute: hosts sharing a cache via
+    # $REPRO_TUNING_CACHE must agree on the hash for byte-identical code
+    assert all(p.startswith("repro/") for p in parts), parts
 
 
 def test_code_hash_distinguishes_factory_closures():
