@@ -31,8 +31,19 @@ machine-readable artifact (default ``BENCH_portability.json``):
          "tuning_cached": bool,                // true = cache hit, no sweep
          "swept_points": int,
          "skipped": str | null}],              // reason when not measured
+      "distributed_kernels": [...],            // same record shape, one per
+                                               // shard_pallas composite
       "phi": {"per_app": {app: float}, "overall": float}
     }
+
+``distributed_kernels`` extends the sweep to the composite ``shard_pallas``
+backends (shard_map around the Pallas kernels): tuned over their
+tile x shard spaces and compared against the same single-device oracle.  On
+a 1-device host (the smoke drift lane) each records an availability skip;
+run under forced host devices (``XLA_FLAGS=--xla_force_host_platform_
+device_count=8``) to measure them.  They never enter Phi-bar — Eq. 4 is the
+single-device portability metric; the device-count axis lives in
+``benchmarks/scaling.py``.
 
 The paper notes Phi-bar can mask per-platform under-performance; the
 artifact therefore always carries the raw per-kernel e_i next to the means.
@@ -58,6 +69,8 @@ from repro.kernels.minibude import ops as mb_ops
 
 ARTIFACT = "BENCH_portability.json"
 SCHEMA = "repro.portability/v1"
+#: composite backends swept into the distributed_kernels section
+DIST_BACKEND = "shard_pallas"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,8 +162,9 @@ def _portable_backend(kernel) -> Optional[str]:
     return None
 
 
-def _skip(name: str, app: str, reason: str) -> Dict[str, Any]:
-    return {"kernel": name, "app": app, "backend": None,
+def _skip(name: str, app: str, reason: str,
+          backend: Optional[str] = None) -> Dict[str, Any]:
+    return {"kernel": name, "app": app, "backend": backend,
             "baseline_backend": None, "shape": "", "dtype": "",
             "tuned_params": {},
             "seconds_default": None, "seconds_tuned": None,
@@ -158,12 +172,57 @@ def _skip(name: str, app: str, reason: str) -> Dict[str, Any]:
             "swept_points": 0, "skipped": reason}
 
 
+def _measure_backend(kernel, case, backend: str, cache: TuningCache,
+                     smoke: bool) -> Tuple[Dict[str, Any], Efficiency]:
+    """Tune + time one backend of one kernel against its oracle (shared by
+    the portable walk and the distributed shard_pallas section).  Returns
+    the artifact record and the Efficiency term behind its ``e_i``."""
+    baseline = kernel.oracle
+    iters = 1 if smoke else case.iters
+    warmup = 1 if smoke else case.warmup
+    max_points = 2 if smoke else None
+    args, kwargs = case.make_args(smoke)
+    key = make_key(kernel, *args, backend=backend, **kwargs)
+
+    t_base = kernel.time_backend(*args, backend=baseline, iters=iters,
+                                 warmup=warmup, **kwargs)
+    t_default = kernel.time_backend(*args, backend=backend, iters=iters,
+                                    warmup=warmup, **kwargs)
+    tr = tune(kernel, *args, backend=backend, cache=cache, iters=iters,
+              warmup=warmup, max_points=max_points, **kwargs)
+    # a cache hit only skips the *search*: its seconds were measured in
+    # another session (different load/iters), so re-time at the cached
+    # params — e_i must never be a ratio of cross-session timings
+    t_at_best = tr.seconds
+    if tr.cached:
+        t_at_best = (t_default if not tr.params else
+                     kernel.time_backend(*args, backend=backend, iters=iters,
+                                         warmup=warmup, **tr.params,
+                                         **kwargs))
+    # the declared defaults are always an admissible configuration: if
+    # the (possibly truncated) sweep did worse, the defaults win
+    if tr.skipped is not None or t_default <= t_at_best:
+        t_tuned, tuned_params = t_default, {}
+    else:
+        t_tuned, tuned_params = t_at_best, tr.params
+
+    e = Efficiency(key.platform, kernel.name, 1.0 / t_tuned, 1.0 / t_base)
+    return {
+        "kernel": kernel.name, "app": case.app, "backend": backend,
+        "baseline_backend": baseline, "shape": key.shape,
+        "dtype": key.dtype,
+        "tuned_params": tuned_params, "seconds_default": t_default,
+        "seconds_tuned": t_tuned, "seconds_baseline": t_base,
+        "e_i": e.e, "tuning_cached": tr.cached,
+        "swept_points": len(tr.swept), "skipped": tr.skipped,
+    }, e
+
+
 def run(smoke: bool = False, json_path: str = ARTIFACT,
         cache_path: Optional[str] = None) -> Dict[str, Any]:
     """Walk the registry, tune, time, and emit CSV + JSON.  Returns the
     artifact dict (also written to ``json_path``)."""
     cache = TuningCache(path=cache_path)
-    max_points = 2 if smoke else None
     records: List[Dict[str, Any]] = []
     app_terms: Dict[str, List[Efficiency]] = {}
 
@@ -185,51 +244,56 @@ def run(smoke: bool = False, json_path: str = ARTIFACT,
                                  f"oracle {baseline!r} unavailable"))
             continue
 
-        iters = 1 if smoke else case.iters
-        warmup = 1 if smoke else case.warmup
-        args, kwargs = case.make_args(smoke)
-        key = make_key(kernel, *args, backend=port, **kwargs)
-
-        t_base = kernel.time_backend(*args, backend=baseline, iters=iters,
-                                     warmup=warmup, **kwargs)
-        t_default = kernel.time_backend(*args, backend=port, iters=iters,
-                                        warmup=warmup, **kwargs)
-        tr = tune(kernel, *args, backend=port, cache=cache, iters=iters,
-                  warmup=warmup, max_points=max_points, **kwargs)
-        # a cache hit only skips the *search*: its seconds were measured in
-        # another session (different load/iters), so re-time at the cached
-        # params — e_i must never be a ratio of cross-session timings
-        t_at_best = tr.seconds
-        if tr.cached:
-            t_at_best = (t_default if not tr.params else
-                         kernel.time_backend(*args, backend=port, iters=iters,
-                                             warmup=warmup, **tr.params,
-                                             **kwargs))
-        # the declared defaults are always an admissible configuration: if
-        # the (possibly truncated) sweep did worse, the defaults win
-        if tr.skipped is not None or t_default <= t_at_best:
-            t_tuned, tuned_params = t_default, {}
-        else:
-            t_tuned, tuned_params = t_at_best, tr.params
-
-        e = Efficiency(key.platform, name, 1.0 / t_tuned, 1.0 / t_base)
+        rec, e = _measure_backend(kernel, case, port, cache, smoke)
         app_terms.setdefault(case.app, []).append(e)
-        records.append({
-            "kernel": name, "app": case.app, "backend": port,
-            "baseline_backend": baseline, "shape": key.shape,
-            "dtype": key.dtype,
-            "tuned_params": tuned_params, "seconds_default": t_default,
-            "seconds_tuned": t_tuned, "seconds_baseline": t_base,
-            "e_i": e.e, "tuning_cached": tr.cached,
-            "swept_points": len(tr.swept), "skipped": tr.skipped,
-        })
+        records.append(rec)
         # the derived field must stay comma-free (CSV scaffold contract)
         params_str = (";".join(f"{k}={v}" for k, v in
-                               sorted(tuned_params.items()))
+                               sorted(rec["tuned_params"].items()))
                       or "defaults")
-        emit(f"phi.e.{name}", t_tuned,
-             f"e={e.e:.3f} default_us={t_default * 1e6:.1f} "
-             f"tuned={params_str}{' (cache)' if tr.cached else ''}")
+        emit(f"phi.e.{name}", rec["seconds_tuned"],
+             f"e={e.e:.3f} default_us={rec['seconds_default'] * 1e6:.1f} "
+             f"tuned={params_str}{' (cache)' if rec['tuning_cached'] else ''}")
+
+    # the composite shard_pallas backends ride the same Eq.-4 machinery
+    # (tuned over their tile x shard spaces, compared against the same
+    # oracle) but never enter Phi-bar: Eq. 4 is the single-device metric,
+    # the device-count axis lives in benchmarks/scaling.py.  On a 1-device
+    # host each records an availability skip instead of a measurement.
+    dist_records: List[Dict[str, Any]] = []
+    for name in registry.names():
+        kernel = registry.get(name)
+        b = kernel.backends.get(DIST_BACKEND)
+        if b is None:
+            continue
+        case = CASES.get(name)
+        if case is None:
+            dist_records.append(_skip(name, "-", "no benchmark case defined",
+                                      backend=DIST_BACKEND))
+            continue
+        if not b.is_available():
+            dist_records.append(_skip(
+                name, case.app,
+                f"{DIST_BACKEND} unavailable "
+                f"({jax.device_count()} device(s))", backend=DIST_BACKEND))
+            continue
+        try:
+            rec, _ = _measure_backend(kernel, case, DIST_BACKEND, cache,
+                                      smoke)
+        except ValueError as exc:
+            # the case shape cannot satisfy the backend's default tile /
+            # shard resolution on this topology — a reasoned skip, not a
+            # crashed sweep
+            dist_records.append(_skip(name, case.app, str(exc),
+                                      backend=DIST_BACKEND))
+            continue
+        dist_records.append(rec)
+        params_str = (";".join(f"{k}={v}" for k, v in
+                               sorted(rec["tuned_params"].items()))
+                      or "defaults")
+        emit(f"dist.e.{name}", rec["seconds_tuned"],
+             f"e={rec['e_i']:.3f} backend={DIST_BACKEND} "
+             f"tuned={params_str}")
 
     phi_per_app = {app: phi_bar(terms) for app, terms in app_terms.items()}
     for app, phi in sorted(phi_per_app.items()):
@@ -244,6 +308,7 @@ def run(smoke: bool = False, json_path: str = ARTIFACT,
         "platform": jax.devices()[0].platform,
         "smoke": smoke,
         "kernels": records,
+        "distributed_kernels": dist_records,
         "phi": {"per_app": phi_per_app, "overall": overall},
     }
     with open(json_path, "w") as f:

@@ -9,9 +9,9 @@ Emits ``name,us_per_call,derived`` CSV (scaffold contract).  Mapping:
     hartree_fock     -> paper Table 4 (wall-clock)
     portability      -> paper Table 5 (Eq. 4 Phi-bar, tuned via the
                         registry sweep; writes BENCH_portability.json)
-    scaling          -> weak/strong device-count scaling of the xla_shard
-                        backends (simulated host devices; writes
-                        BENCH_scaling.json)
+    scaling          -> weak/strong device-count scaling of the sharded
+                        backends, xla_shard vs shard_pallas per kernel
+                        (simulated host devices; writes BENCH_scaling.json)
     roofline_kernels -> paper Fig. 2 + Tables 2-3 (AI / bound placement)
     lm_step          -> framework-level LM step timings
     serving          -> continuous-batching engine tok/s + p50/p95 latency

@@ -1,8 +1,12 @@
 """Weak/strong device-count scaling of the science kernels (BENCH_scaling.json).
 
 The paper's Eq.-4 methodology compares compiler backends on one device; this
-module extends the axis to *device count* via the ``xla_shard`` backends the
-domain-decomposition subsystem registers (``repro.distributed.domain``):
+module extends the axis to *device count* via the sharded backends the
+distributed subsystem registers — the oracle-arithmetic ``xla_shard``
+decompositions (``repro.distributed.domain``) AND the composite
+``shard_pallas`` backends (``repro.distributed.shard_pallas``: the unchanged
+Pallas kernels inside ``shard_map``, interpret mode off-TPU), so the curves
+compare the two portability stories shard-for-shard:
 
   * **strong scaling** — fixed global problem, growing shard count:
       efficiency(S) = t_1 / (S * t_S)
@@ -11,13 +15,14 @@ domain-decomposition subsystem registers (``repro.distributed.domain``):
       efficiency(S) = t_1(base) / t_S(S * base).
 
 stencil7 is measured once per *decomposition variant* — 1-D z slabs and 2-D
-``(sz, sy)`` pencils, each with and without halo/compute overlap — because
-the decomposition shape governs the surface-to-volume halo traffic that
-bounds a memory-bound stencil's efficiency.  Every timed point consults the
-PR-2 tuning cache first (Eq.-4 times *best* configurations, not defaults):
-cached parameters are merged under the point's forced shard settings and
-re-timed fresh — cached seconds never enter a ratio — and the artifact
-records the tuning provenance per point.
+``(sz, sy)`` pencils, the ``xla_shard`` lanes each with and without
+halo/compute overlap — because the decomposition shape governs the
+surface-to-volume halo traffic that bounds a memory-bound stencil's
+efficiency.  Every timed point consults the PR-2 tuning cache first (Eq.-4
+times *best* configurations, not defaults): cached parameters are merged
+under the point's forced shard settings and re-timed fresh — cached seconds
+never enter a ratio — and the artifact records the tuning provenance per
+point.
 
 Hartree-Fock has no linear weak-scaling axis (work is O(N^4) in the atom
 count) and records a skip reason instead of a fake curve.
@@ -29,38 +34,47 @@ device, the module re-execs itself in a subprocess with
 (``repro.launch.hostsim`` — a user-set value is respected, never clobbered).
 The child's CSV rows are replayed into ``benchmarks.common.ROWS`` in the
 parent, so orchestrated runs (``benchmarks.run``) see them like any other
-module's.  CPU caveat: "devices" are threads of one host, so efficiencies
-here validate the *machinery* and the shapes of the curves, not hardware
-scaling.
+module's.  CPU caveat: "devices" are threads of one host — and the
+``shard_pallas`` kernels run in interpret mode there — so efficiencies here
+validate the *machinery* and the shapes of the curves, not hardware scaling.
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] --only scaling
     PYTHONPATH=src python -m benchmarks.scaling [--smoke] [--devices 8]
 
-Artifact schema (``repro.scaling/v2``; v1 had a single implicit slab curve
-per kernel and no tuning provenance)::
+Artifact schema (``repro.scaling/v3``; v2 had a single implicit backend per
+kernel — v3 hoists a ``backends`` list so the ``xla_shard`` and
+``shard_pallas`` curves sit side by side; v1 additionally lacked
+decomposition curves and tuning provenance)::
 
-    {"schema": "repro.scaling/v2", "platform": str, "smoke": bool,
+    {"schema": "repro.scaling/v3", "platform": str, "smoke": bool,
      "num_devices": int,
      "kernels": [
-       {"kernel": str, "backend": "xla_shard", "baseline_backend": "xla",
-        "skipped": str | null,
-        "curves": [
-          {"decomp": "slab" | "pencil", "overlap": bool,
-           "strong": {"shape": str, "baseline_seconds": float,
-                      "baseline_tuning": TUNING,
-                      "points": [{"num_shards": int,
-                                  "shard_grid": [sz, sy] | null,
-                                  "seconds": float, "speedup": float,
-                                  "efficiency": float, "tuning": TUNING}]},
-           "weak": {"base_shape": str, "baseline_seconds": float,
-                    "baseline_tuning": TUNING,
-                    "points": [{"num_shards": int,
-                                "shard_grid": [sz, sy] | null, "shape": str,
-                                "seconds": float, "efficiency": float,
-                                "tuning": TUNING}]}
-                   | {"skipped": str}}]}]}
+       {"kernel": str, "baseline_backend": "xla",
+        "backends": [
+          {"backend": "xla_shard" | "shard_pallas", "skipped": str | null,
+           "curves": [
+             {"decomp": "slab" | "pencil", "overlap": bool | null,
+              "strong": {"shape": str, "baseline_seconds": float,
+                         "baseline_tuning": TUNING,
+                         "points": [{"num_shards": int,
+                                     "shard_grid": [sz, sy] | null,
+                                     "seconds": float, "speedup": float,
+                                     "efficiency": float,
+                                     "tuning": TUNING}]},
+              "weak": {"base_shape": str, "baseline_seconds": float,
+                       "baseline_tuning": TUNING,
+                       "points": [{"num_shards": int,
+                                   "shard_grid": [sz, sy] | null,
+                                   "shape": str, "seconds": float,
+                                   "efficiency": float, "tuning": TUNING}]}
+                      | {"skipped": str}}]}]}]}
 
     TUNING = {"cached": bool, "params": {...}, "search": str | null}
+
+``overlap`` is null for ``shard_pallas`` curves: the composite has a single
+structure (the halo-padded local block feeds one Pallas call — that is what
+keeps it bitwise equal to the single-device kernel), so there is no
+halo/compute-overlap axis to sweep.
 """
 
 from __future__ import annotations
@@ -75,7 +89,7 @@ from typing import Any, Dict, List, Tuple
 from benchmarks.common import emit, header
 
 ARTIFACT = "BENCH_scaling.json"
-SCHEMA = "repro.scaling/v2"
+SCHEMA = "repro.scaling/v3"
 DEFAULT_DEVICES = 8
 CSV_HEADER = "name,us_per_call,derived"
 
@@ -86,7 +100,9 @@ CSV_HEADER = "name,us_per_call,derived"
 def _stencil_args(nz, smoke, ny_mult=1):
     import jax.numpy as jnp
     import numpy as np
-    ny, nx = (16, 32) if smoke else (64, 128)
+    # nx is the 128-lane width the Pallas kernel requires, so the
+    # shard_pallas curves share the exact shapes the xla_shard curves time
+    ny, nx = (16, 128) if smoke else (64, 128)
     u = np.random.default_rng(0).standard_normal((nz, ny * ny_mult, nx))
     return (jnp.asarray(u, jnp.float32),)
 
@@ -112,10 +128,14 @@ def _hf_args(natoms, smoke):
 
 
 #: kernel -> (strong extent, weak per-shard extent, args factory); extents
-#: are the decomposed axis (stencil z planes, stream elements, poses, atoms).
-#: stencil7 additionally declares its decomposition variants and a 2-D weak
-#: factory (weak pencils grow z by sz and y by sy, keeping the per-shard
-#: block fixed).
+#: are the decomposed axis (stencil z planes, stream elements, poses, atoms),
+#: sized so every swept shard count divides them AND the per-shard blocks
+#: admit the shard_pallas tile grids (>= 128*128 stream elements and >= 64
+#: poses per shard).  stencil7 additionally declares its decomposition
+#: variants per backend and a 2-D weak factory (weak pencils grow z by sz
+#: and y by sy, keeping the per-shard block fixed); the xla_shard lanes
+#: carry the halo/compute-overlap axis, the shard_pallas composite has a
+#: single structure (overlap = None in the artifact).
 def _catalogue(smoke: bool) -> Dict[str, Dict[str, Any]]:
     return {
         "stencil7": {
@@ -123,21 +143,24 @@ def _catalogue(smoke: bool) -> Dict[str, Dict[str, Any]]:
             "weak": 2 if smoke else 8,
             "make": lambda n: _stencil_args(n, smoke),
             "make_grid": lambda n, sy: _stencil_args(n, smoke, ny_mult=sy),
-            "curves": [("slab", False), ("slab", True),
-                       ("pencil", False), ("pencil", True)],
+            "curves": {
+                "xla_shard": [("slab", False), ("slab", True),
+                              ("pencil", False), ("pencil", True)],
+                "shard_pallas": [("slab", None), ("pencil", None)],
+            },
         },
         "babelstream.triad": {
-            "strong": 1 << 14 if smoke else 1 << 20,
-            "weak": 1 << 12 if smoke else 1 << 17,
+            "strong": 1 << 16 if smoke else 1 << 20,
+            "weak": 1 << 14 if smoke else 1 << 17,
             "make": lambda n: _stream_args(n, smoke, 2),
         },
         "babelstream.dot": {
-            "strong": 1 << 14 if smoke else 1 << 20,
-            "weak": 1 << 12 if smoke else 1 << 17,
+            "strong": 1 << 16 if smoke else 1 << 20,
+            "weak": 1 << 14 if smoke else 1 << 17,
             "make": lambda n: _stream_args(n, smoke, 2),
         },
         "minibude.fasten": {
-            "strong": 128 if smoke else 1024,
+            "strong": 256 if smoke else 1024,
             "weak": 64 if smoke else 256,
             "make": lambda n: _minibude_args(n, smoke),
         },
@@ -164,33 +187,50 @@ def _timed_point(kernel, args, backend, cache, iters, warmup,
     """Median seconds at the cache's best params (merged *under* the forced
     shard settings — the sweep axis always wins), plus the provenance
     record.  Cached seconds are historical (another session, another load):
-    only the *parameters* are reused; the timing is always fresh."""
+    only the *parameters* are reused; the timing is always fresh.
+
+    The cache key does not encode shard settings, so an entry tuned under a
+    different grid can carry tile params (``by`` / ``block_rows``) that are
+    invalid for *this* point's forced grid (e.g. ``by=64`` tuned on a slab
+    does not divide a pencil's 32-wide local block).  The merged point is
+    therefore re-validated against the backend's declared constraint and
+    falls back to the declared defaults when it fails — a dropped cache
+    hit, never a crashed benchmark.
+    """
     from repro.core import tuning
 
     hit = cache.get(tuning.make_key(kernel, *args, backend=backend))
     cached = tuning.params_from_cache(hit["params"]) if hit else {}
-    params = {**cached, **forced}
-    secs = kernel.time_backend(*args, backend=backend, iters=iters,
-                               warmup=warmup, **params)
+    merged = {**cached, **forced}
+    space = kernel.tunable_space(backend)
+    if cached and space is not None and space.constraint is not None:
+        point = {k: merged[k] for k in space.params if k in merged}
+        if set(point) == set(space.params) and not space.constraint(
+                point, *args):
+            hit, merged = None, dict(forced)  # incompatible hit: dropped
     provenance = {"cached": hit is not None,
-                  "params": dict(params),
+                  "params": dict(merged),
                   "search": hit.get("search", "exhaustive") if hit else None}
+    secs = kernel.time_backend(*args, backend=backend, iters=iters,
+                               warmup=warmup, **merged)
     return secs, provenance
 
 
-def _curve_label(decomp: str, overlap: bool) -> str:
+def _curve_label(decomp: str, overlap) -> str:
     return decomp + ("+ov" if overlap else "")
 
 
 def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
     import jax
 
-    import repro.kernels  # noqa: F401  (registers xla_shard backends)
+    import repro.kernels  # noqa: F401  (registers the sharded backends)
     from repro.core.portable import registry
     from repro.core.tuning import TuningCache
     from repro.distributed.domain import (SHARD_BACKEND,
                                           balanced_pencil_grid)
+    from repro.distributed.shard_pallas import PALLAS_SHARD_BACKEND
 
+    backends = (SHARD_BACKEND, PALLAS_SHARD_BACKEND)
     dc = jax.device_count()
     cache = TuningCache()
     shard_counts = [s for s in ((2, 4) if smoke else (2, 4, 8)) if s <= dc]
@@ -199,17 +239,20 @@ def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
 
     for name, spec in _catalogue(smoke).items():
         kernel = registry.get(name)
-        b = kernel.backends.get(SHARD_BACKEND)
-        rec: Dict[str, Any] = {"kernel": name, "backend": SHARD_BACKEND,
+        rec: Dict[str, Any] = {"kernel": name,
                                "baseline_backend": kernel.oracle,
-                               "skipped": None}
-        if b is None or not b.is_available():
-            rec["skipped"] = (f"{SHARD_BACKEND} unavailable "
-                              f"({dc} device(s))")
-            records.append(rec)
+                               "backends": []}
+        records.append(rec)
+        if not any(kernel.backends.get(bk) is not None
+                   and kernel.backends[bk].is_available()
+                   for bk in backends):
+            for bk in backends:
+                rec["backends"].append(
+                    {"backend": bk, "curves": [],
+                     "skipped": f"{bk} unavailable ({dc} device(s))"})
             continue
 
-        curves = spec.get("curves") or [("slab", False)]
+        # baselines are per kernel (shared by every backend's curves)
         strong_args = spec["make"](spec["strong"])
         t1, t1_prov = _timed_point(kernel, strong_args, kernel.oracle, cache,
                                    iters, warmup, {})
@@ -219,84 +262,100 @@ def _measure(smoke: bool, json_path: str) -> Dict[str, Any]:
             t1w, t1w_prov = _timed_point(kernel, weak_base, kernel.oracle,
                                          cache, iters, warmup, {})
 
-        rec["curves"] = []
-        for decomp, overlap in curves:
-            label = _curve_label(decomp, overlap)
+        for backend in backends:
+            b = kernel.backends.get(backend)
+            brec: Dict[str, Any] = {"backend": backend, "skipped": None,
+                                    "curves": []}
+            rec["backends"].append(brec)
+            if b is None or not b.is_available():
+                brec["skipped"] = f"{backend} unavailable ({dc} device(s))"
+                continue
+            curves = (spec["curves"][backend] if "curves" in spec
+                      else [("slab", False if backend == SHARD_BACKEND
+                             else None)])
 
-            def _point_plan(s, args):
-                """(shard_grid, forced kwargs) for S total shards, or None
-                when this decomposition cannot use S shards here.  ``args``
-                is the *fixed* global problem (strong lane); weak lanes
-                pass ``None`` and get the shape-agnostic grid — their
-                global extents are built *from* the grid, so they divide
-                by construction."""
-                if "curves" not in spec:       # 1-D kernels: num_shards
-                    return None, {"num_shards": s}
-                if decomp == "slab":
-                    grid = (s, 1)
-                    if args is not None and args[0].shape[0] % s:
-                        grid = None
-                elif args is not None:
-                    grid = balanced_pencil_grid(s, args[0].shape[0],
-                                                args[0].shape[1])
-                else:
-                    grid = balanced_pencil_grid(s)
-                if grid is None:
-                    return None, None
-                return grid, {"decomp": decomp, "shard_grid": grid,
-                              "overlap": overlap}
+            for decomp, overlap in curves:
+                label = _curve_label(decomp, overlap)
 
-            # strong: fixed global problem, shards grow
-            points = []
-            for s in shard_counts:
-                grid, forced = _point_plan(s, strong_args)
-                if forced is None:
-                    continue
-                ts, prov = _timed_point(kernel, strong_args, SHARD_BACKEND,
-                                        cache, iters, warmup, forced)
-                eff = t1 / (s * ts)
-                points.append({"num_shards": s,
-                               "shard_grid": list(grid) if grid else None,
-                               "seconds": ts, "speedup": t1 / ts,
-                               "efficiency": eff, "tuning": prov})
-                emit(f"scaling.{name}.{label}.strong.s{s}", ts,
-                     f"eff={eff:.3f} speedup={t1 / ts:.2f}x")
-            curve: Dict[str, Any] = {
-                "decomp": decomp, "overlap": overlap,
-                "strong": {"shape": _shape_sig(strong_args),
-                           "baseline_seconds": t1,
-                           "baseline_tuning": t1_prov, "points": points}}
+                def _point_plan(s, args):
+                    """(shard_grid, forced kwargs) for S total shards, or
+                    None when this decomposition cannot use S shards here.
+                    ``args`` is the *fixed* global problem (strong lane);
+                    weak lanes pass ``None`` and get the shape-agnostic
+                    grid — their global extents are built *from* the grid,
+                    so they divide by construction."""
+                    if "curves" not in spec:   # 1-D kernels: num_shards
+                        return None, {"num_shards": s}
+                    if decomp == "slab":
+                        grid = (s, 1)
+                        if args is not None and args[0].shape[0] % s:
+                            grid = None
+                    elif args is not None:
+                        grid = balanced_pencil_grid(s, args[0].shape[0],
+                                                    args[0].shape[1])
+                    else:
+                        grid = balanced_pencil_grid(s)
+                    if grid is None:
+                        return None, None
+                    forced = {"decomp": decomp, "shard_grid": grid}
+                    if overlap is not None:   # shard_pallas has no axis
+                        forced["overlap"] = overlap
+                    return grid, forced
 
-            # weak: fixed per-shard problem, global grows with shards
-            if spec["weak"] is None:
-                curve["weak"] = {"skipped": spec["weak_skip"]}
-            else:
+                # strong: fixed global problem, shards grow
                 points = []
                 for s in shard_counts:
-                    grid, forced = _point_plan(s, None)
+                    grid, forced = _point_plan(s, strong_args)
                     if forced is None:
                         continue
-                    if grid is not None and grid[1] > 1:
-                        args_s = spec["make_grid"](spec["weak"] * grid[0],
-                                                   grid[1])
-                    else:
-                        args_s = spec["make"](spec["weak"] * s)
-                    ts, prov = _timed_point(kernel, args_s, SHARD_BACKEND,
+                    ts, prov = _timed_point(kernel, strong_args, backend,
                                             cache, iters, warmup, forced)
-                    eff = t1w / ts
+                    eff = t1 / (s * ts)
                     points.append({"num_shards": s,
-                                   "shard_grid": list(grid) if grid else None,
-                                   "shape": _shape_sig(args_s),
-                                   "seconds": ts, "efficiency": eff,
-                                   "tuning": prov})
-                    emit(f"scaling.{name}.{label}.weak.s{s}", ts,
-                         f"eff={eff:.3f}")
-                curve["weak"] = {"base_shape": _shape_sig(weak_base),
-                                 "baseline_seconds": t1w,
-                                 "baseline_tuning": t1w_prov,
-                                 "points": points}
-            rec["curves"].append(curve)
-        records.append(rec)
+                                   "shard_grid": list(grid) if grid else
+                                   None,
+                                   "seconds": ts, "speedup": t1 / ts,
+                                   "efficiency": eff, "tuning": prov})
+                    emit(f"scaling.{name}.{backend}.{label}.strong.s{s}",
+                         ts, f"eff={eff:.3f} speedup={t1 / ts:.2f}x")
+                curve: Dict[str, Any] = {
+                    "decomp": decomp, "overlap": overlap,
+                    "strong": {"shape": _shape_sig(strong_args),
+                               "baseline_seconds": t1,
+                               "baseline_tuning": t1_prov,
+                               "points": points}}
+
+                # weak: fixed per-shard problem, global grows with shards
+                if spec["weak"] is None:
+                    curve["weak"] = {"skipped": spec["weak_skip"]}
+                else:
+                    points = []
+                    for s in shard_counts:
+                        grid, forced = _point_plan(s, None)
+                        if forced is None:
+                            continue
+                        if grid is not None and grid[1] > 1:
+                            args_s = spec["make_grid"](
+                                spec["weak"] * grid[0], grid[1])
+                        else:
+                            args_s = spec["make"](spec["weak"] * s)
+                        ts, prov = _timed_point(kernel, args_s, backend,
+                                                cache, iters, warmup,
+                                                forced)
+                        eff = t1w / ts
+                        points.append({"num_shards": s,
+                                       "shard_grid": list(grid) if grid
+                                       else None,
+                                       "shape": _shape_sig(args_s),
+                                       "seconds": ts, "efficiency": eff,
+                                       "tuning": prov})
+                        emit(f"scaling.{name}.{backend}.{label}.weak.s{s}",
+                             ts, f"eff={eff:.3f}")
+                    curve["weak"] = {"base_shape": _shape_sig(weak_base),
+                                     "baseline_seconds": t1w,
+                                     "baseline_tuning": t1w_prov,
+                                     "points": points}
+                brec["curves"].append(curve)
 
     artifact = {
         "schema": SCHEMA,

@@ -4,21 +4,29 @@
 
 Simulates a multi-device host (the flag must be set before jax initializes,
 which is why this script — not the library — does it), then runs each
-science family on its single-device oracle and on the ``xla_shard`` backend
-the domain-decomposition subsystem registered, checking the distributed
-result against the oracle:
+science family on its single-device oracle and on the sharded backends the
+distributed subsystem registered, checking every distributed result against
+the oracle:
 
-  * stencil7        1-D z slabs AND 2-D (sz, sy) pencils + per-axis ppermute
-                    halo exchange, each with the double-buffered
-                    halo/compute-overlap variant (interior computes while
-                    halos are in flight)
-  * babelstream     block-partitioned triad (elementwise) + psum dot
-  * minibude        pose-parallel energies
-  * hartree_fock    l-slab quartet contributions accumulated with psum
+  * ``xla_shard`` — the oracle arithmetic under shard_map:
+      - stencil7     1-D z slabs AND 2-D (sz, sy) pencils + per-axis
+                     ppermute halo exchange, each with the double-buffered
+                     halo/compute-overlap variant (interior computes while
+                     halos are in flight)
+      - babelstream  block-partitioned triad (elementwise) + psum dot
+      - minibude     pose-parallel energies
+      - hartree_fock l-slab quartet contributions accumulated with psum
+  * ``shard_pallas`` — the *unchanged Pallas kernels* under shard_map
+    (interpret mode off-TPU), the shard grid composing with each family's
+    tile tunables (stencil ``by``, stream ``block_rows``, pose/i tiles);
+    the stencil/stream/pose results are additionally bitwise identical to
+    the single-device Pallas backend — sharding does not change the
+    kernel's output.
 
-CPU caveat: the "devices" are threads of one host, so the timings prove the
-decomposition machinery, not hardware scaling — see benchmarks/scaling.py
-for the weak/strong curves and BENCH_scaling.json.
+CPU caveat: the "devices" are threads of one host (and shard_pallas runs
+interpret-mode kernels there), so the timings prove the decomposition
+machinery, not hardware scaling — see benchmarks/scaling.py for the
+weak/strong curves and BENCH_scaling.json (per-backend since v3).
 """
 
 import argparse
@@ -40,20 +48,21 @@ from repro.kernels.hartree_fock import ref as hf_ref  # noqa: E402
 from repro.kernels.minibude import ops as mb_ops  # noqa: E402
 
 
-def show(name, kernel, args, exact=True, label=None, **shard_kw):
+def show(name, kernel, args, exact=True, label=None, backend="xla_shard",
+         against="xla", **shard_kw):
     t_x = kernel.time_backend(*args, backend="xla", iters=3)
-    t_s = kernel.time_backend(*args, backend="xla_shard", iters=3,
-                              **shard_kw)
-    want = np.asarray(kernel(*args, backend="xla"))
-    got = np.asarray(kernel(*args, backend="xla_shard", **shard_kw))
+    t_s = kernel.time_backend(*args, backend=backend, iters=3, **shard_kw)
+    want = np.asarray(kernel(*args, backend=against))
+    got = np.asarray(kernel(*args, backend=backend, **shard_kw))
     if exact:
-        assert np.array_equal(want, got), f"{name}: sharded != oracle"
-        match = "bitwise"
+        assert np.array_equal(want, got), \
+            f"{name}: {backend} != {against}"
+        match = f"bitwise vs {against}"
     else:
         np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
-        match = "~1e-4"
+        match = f"~1e-4 vs {against}"
     label = label or ",".join(f"{k}={v}" for k, v in shard_kw.items())
-    print(f"{name:18s} xla {t_x * 1e3:8.2f}ms   xla_shard[{label}] "
+    print(f"{name:18s} xla {t_x * 1e3:8.2f}ms   {backend}[{label}] "
           f"{t_s * 1e3:8.2f}ms   match: {match}")
 
 
@@ -68,7 +77,10 @@ def main() -> None:
           f"running every family at num_shards={shards}\n")
     rng = np.random.default_rng(0)
 
-    u = jnp.asarray(rng.standard_normal((32, 32, 64)), jnp.float32)
+    # (ny, nx) = (64, 128): the Pallas lane width and default y-tile, so
+    # the same array feeds both sharded backends AND the single-device
+    # Pallas baseline at its defaults
+    u = jnp.asarray(rng.standard_normal((32, 64, 128)), jnp.float32)
     s7 = get_kernel("stencil7")
     show("stencil7", s7, (u,), label=f"slab {shards}x1",
          num_shards=shards)
@@ -95,8 +107,32 @@ def main() -> None:
     show("hartree_fock", get_kernel("hartree_fock.twoel"), (pos, dens),
          exact=False, num_shards=shards)
 
-    print("\nevery sharded backend validated against its oracle; "
-          "see BENCH_scaling.json for the efficiency curves")
+    # the shard_pallas composites: the SAME Pallas kernel source, sharded
+    # (interpret mode on these simulated host devices) — bitwise against
+    # the single-device Pallas backend where the math is reduction-free
+    print()
+    show("stencil7", s7, (u,), label=f"slab {shards}x1",
+         backend="shard_pallas", against="pallas_interpret",
+         num_shards=shards)
+    if n >= 4:
+        show("stencil7", s7, (u,), label="pencil 2x2",
+             backend="shard_pallas", against="pallas_interpret",
+             decomp="pencil", shard_grid=(2, 2))
+    show("babelstream.triad", get_kernel("babelstream.triad"), (a, b),
+         backend="shard_pallas", against="pallas_interpret",
+         num_shards=shards)
+    show("babelstream.dot", get_kernel("babelstream.dot"), (a, b),
+         exact=False, backend="shard_pallas", num_shards=shards)
+    show("minibude.fasten", get_kernel("minibude.fasten"), deck,
+         backend="shard_pallas", against="pallas_interpret",
+         num_shards=shards)
+    show("hartree_fock", get_kernel("hartree_fock.twoel"), (pos, dens),
+         exact=False, backend="shard_pallas", num_shards=shards)
+
+    print("\nevery sharded backend validated against its oracle (and the "
+          "shard_pallas composites against their single-device Pallas "
+          "kernels); see BENCH_scaling.json for the per-backend efficiency "
+          "curves")
 
 
 if __name__ == "__main__":

@@ -150,9 +150,16 @@ def resolve_num_shards(extent: int, num_shards: Optional[int] = None,
         f"device(s)")
 
 
-def _shard_ok(num_shards: int, extent: int) -> bool:
-    """Tunable-space constraint twin of ``resolve_num_shards``."""
-    return (num_shards >= 2 and num_shards <= jax.device_count()
+def _shard_ok(num_shards: int, extent: int,
+              device_count: Optional[int] = None) -> bool:
+    """Tunable-space constraint twin of ``resolve_num_shards``.
+
+    ``device_count=None`` reads the live topology; tests (and any caller
+    reasoning about a hypothetical host) inject an explicit count.
+    """
+    if device_count is None:
+        device_count = jax.device_count()
+    return (num_shards >= 2 and num_shards <= device_count
             and extent % num_shards == 0)
 
 
@@ -230,13 +237,16 @@ def resolve_shard_grid(nz: int, ny: int, *, decomp: str = "slab",
     return sz, sy
 
 
-def _stencil_point_ok(p, nz: int, ny: int) -> bool:
+def _stencil_point_ok(p, nz: int, ny: int,
+                      device_count: Optional[int] = None) -> bool:
     """Tunable-space constraint twin of ``resolve_shard_grid``."""
+    if device_count is None:
+        device_count = jax.device_count()
     try:
         sz, sy = (int(x) for x in p["shard_grid"])
     except (KeyError, TypeError, ValueError):
         return False
-    if sz * sy < 2 or sz * sy > jax.device_count():
+    if sz * sy < 2 or sz * sy > device_count:
         return False
     if nz % sz or ny % sy:
         return False
@@ -520,8 +530,8 @@ def register_sharded_backends() -> None:
         k.declare_tunables(
             SHARD_BACKEND, decomp=STENCIL_DECOMPS,
             shard_grid=STENCIL_SHARD_GRIDS, overlap=OVERLAP_GRID,
-            constraint=lambda p, u, *a, **kw:
-                _stencil_point_ok(p, u.shape[0], u.shape[1]))
+            constraint=lambda p, u, *a, device_count=None, **kw:
+                _stencil_point_ok(p, u.shape[0], u.shape[1], device_count))
 
     for op, fn in stream_shard_fns().items():
         k = get_kernel(f"babelstream.{op}")
@@ -530,24 +540,24 @@ def register_sharded_backends() -> None:
         k.add_backend(SHARD_BACKEND, fn, available=multi_device)
         k.declare_tunables(
             SHARD_BACKEND, num_shards=SHARD_GRID,
-            constraint=lambda p, *arrays, **kw:
-                _shard_ok(p["num_shards"], arrays[0].shape[0]))
+            constraint=lambda p, *arrays, device_count=None, **kw:
+                _shard_ok(p["num_shards"], arrays[0].shape[0], device_count))
 
     k = get_kernel("minibude.fasten")
     if SHARD_BACKEND not in k.backends:
         k.add_backend(SHARD_BACKEND, fasten_shard, available=multi_device)
         k.declare_tunables(
             SHARD_BACKEND, num_shards=SHARD_GRID,
-            constraint=lambda p, *deck, **kw:
-                _shard_ok(p["num_shards"], deck[4].shape[1]))
+            constraint=lambda p, *deck, device_count=None, **kw:
+                _shard_ok(p["num_shards"], deck[4].shape[1], device_count))
 
     k = get_kernel("hartree_fock.twoel")
     if SHARD_BACKEND not in k.backends:
         k.add_backend(SHARD_BACKEND, fock_shard, available=multi_device)
         k.declare_tunables(
             SHARD_BACKEND, num_shards=SHARD_GRID,
-            constraint=lambda p, positions, *a, **kw:
-                _shard_ok(p["num_shards"], positions.shape[0]))
+            constraint=lambda p, positions, *a, device_count=None, **kw:
+                _shard_ok(p["num_shards"], positions.shape[0], device_count))
 
 
 # importing the ops modules (not the package, to stay cycle-safe when

@@ -11,6 +11,9 @@ import repro.kernels.hartree_fock.ops  # noqa: F401
 import repro.kernels.flash_attention.ops  # noqa: F401
 import repro.kernels.rwkv6.ops  # noqa: F401
 
-# last (it imports the ops modules above): attaches the multi-device
-# `xla_shard` backends + num_shards tunables to the science families
+# last (they import the ops modules above): attach the multi-device
+# `xla_shard` backends + num_shards tunables, then the composite
+# `shard_pallas` backends (shard_map around the Pallas kernels) with their
+# tile x shard tunable spaces
 import repro.distributed.domain  # noqa: F401
+import repro.distributed.shard_pallas  # noqa: F401

@@ -11,6 +11,7 @@ zero-initialised on the first step.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +21,27 @@ from jax.experimental import pallas as pl
 # VMEM next to double-buffering, and a multiple of the (8,128) vreg.
 BLOCK_ROWS = 512
 LANES = 128
+#: declared row-tile grid (ops.py registers it; sharded composites reuse it)
+BLOCK_ROWS_GRID = (128, 256, 512, 1024)
+
+
+def local_block_rows(n_local: int, block_rows: Optional[int] = None) -> int:
+    """Row tile for a (possibly sharded) local 1-D block of ``n_local``
+    elements.  An explicit ``block_rows`` is validated against the local
+    extent (the grid must tile ``(n_local/128, 128)`` exactly); ``None``
+    picks the largest declared tile that fits."""
+    if block_rows is not None:
+        if n_local % (block_rows * LANES):
+            raise ValueError(
+                f"block_rows={block_rows} does not tile the local extent "
+                f"{n_local} into ({block_rows}, {LANES}) blocks")
+        return block_rows
+    for cand in sorted(BLOCK_ROWS_GRID, reverse=True):
+        if n_local % (cand * LANES) == 0:
+            return cand
+    raise ValueError(
+        f"no declared row tile {BLOCK_ROWS_GRID} tiles the local extent "
+        f"{n_local}")
 
 
 def _grid_1d(n: int, block_rows: int) -> int:
@@ -116,3 +138,19 @@ def dot_2d(a2, b2, *, block_rows: int = BLOCK_ROWS, interpret: bool = False):
         interpret=interpret,
     )(a2, b2)
     return out[0, 0]
+
+
+def stream_2d_fns():
+    """op name -> (2-D kernel fn, n array args, takes_scalar).
+
+    The local-block entry points of this family: every fn consumes
+    ``(rows, 128)`` views of any extent, so the sharded composite backends
+    feed it per-device blocks exactly like ops.py feeds it whole arrays.
+    """
+    return {
+        "copy": (copy_2d, 1, False),
+        "mul": (mul_2d, 1, True),
+        "add": (add_2d, 2, False),
+        "triad": (triad_2d, 2, True),
+        "dot": (dot_2d, 2, False),
+    }

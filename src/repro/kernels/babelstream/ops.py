@@ -95,5 +95,5 @@ for _op in ("copy", "mul", "add", "triad", "dot"):
         "pallas_interpret",
         functools.partial(_PALLAS[_op], interpret=True))
     _k.declare_tunables(("pallas", "pallas_interpret"),
-                        block_rows=(128, 256, 512, 1024),
+                        block_rows=K.BLOCK_ROWS_GRID,
                         constraint=_block_rows_ok)

@@ -14,11 +14,18 @@ contribution with zero write contention:
 Both the J tile (ij|kl) and the K tile (ik|jl) for fixed (k,l,g...) are
 (bi, N) VPU expressions sharing the same loop nest.  erf/exp/rsqrt are the
 transcendental hot ops (the paper's "fast-math" sensitivity analogue).
+
+``twoel_slab_tiled`` is the local-block entry point of the family: the same
+kernel body with the quartet loop's *l* index restricted to an
+``[l0, l0+nl)`` slab, the slab offset a traced scalar operand — the sharded
+composite backend runs one slab per device and ``psum``s the partial Fock
+matrices (the distributed analogue of the paper's atomic scatter-adds).
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,67 +35,118 @@ from jax.experimental import pallas as pl
 from repro.kernels.hartree_fock.ref import TWO_PI_POW_2_5, Basis, boys_f0
 
 I_TILE = 8  # Fock rows per grid step (sublane height)
+#: declared i-tile grid (ops.py registers it; sharded composites reuse it)
+I_TILE_GRID = (4, 8, 16)
 
 
-def _twoel_body(pos_i_ref, pos_ref, dens_ref, zc_ref, o_ref, *,
-                natoms: int, ngauss: int):
-    dt = o_ref.dtype
+def local_i_tile(natoms: int, i_tile: Optional[int] = None) -> int:
+    """Fock-row tile for an ``natoms``-row build (the *i* rows stay whole
+    under the l-slab decomposition — only the quartet loop shards).  An
+    explicit ``i_tile`` is validated; ``None`` picks the largest declared
+    tile that divides the row count."""
+    if i_tile is not None:
+        if natoms % i_tile:
+            raise ValueError(
+                f"i_tile={i_tile} does not divide natoms={natoms}")
+        return i_tile
+    for cand in sorted(I_TILE_GRID, reverse=True):
+        if natoms % cand == 0:
+            return cand
+    raise ValueError(
+        f"no declared i-tile {I_TILE_GRID} divides natoms={natoms}")
+
+
+def _ssss_tile(dt, ax, ay, az, za, bx, by, bz, zb,
+               cx, cy, cz, zc, dx, dy, dz, zd):
+    """(bi,N)-broadcast ssss integral for one primitive quartet."""
+    p = za + zb
+    q = zc + zd
+    ab2 = (ax - bx) ** 2 + (ay - by) ** 2 + (az - bz) ** 2
+    cd2 = (cx - dx) ** 2 + (cy - dy) ** 2 + (cz - dz) ** 2
+    kab = jnp.exp(-(za * zb / p) * ab2)
+    kcd = jnp.exp(-(zc * zd / q) * cd2)
+    px_, py_, pz_ = ((za * ax + zb * bx) / p, (za * ay + zb * by) / p,
+                     (za * az + zb * bz) / p)
+    qx_, qy_, qz_ = ((zc * cx + zd * dx) / q, (zc * cy + zd * dy) / q,
+                     (zc * cz + zd * dz) / q)
+    pq2 = (px_ - qx_) ** 2 + (py_ - qy_) ** 2 + (pz_ - qz_) ** 2
+    t = (p * q / (p + q)) * pq2
+    pref = dt.type(TWO_PI_POW_2_5) / (p * q * jnp.sqrt(p + q))
+    return pref * kab * kcd * boys_f0(t)
+
+
+def _quartet_term(dt, pos_i_refs, pos_ref, dens_ref, zc_ref, *,
+                  natoms: int, ngauss: int, nl, l0, idx):
+    """One (k, l, g1..g4) step of the gather loop: the J and K (bi, N)
+    tiles scaled by the density element, with ``l`` enumerated over an
+    ``[l0, l0+nl)`` slab (the full build is the ``l0=0, nl=natoms`` slab)."""
     N, G = natoms, ngauss
+    xi, yi, zi, xj, yj, zj = pos_i_refs
+    kl, g_all = idx // (G * G * G * G), idx % (G * G * G * G)
+    k, l = kl // nl, l0 + kl % nl
+    g34, g12 = g_all // (G * G), g_all % (G * G)
+    g3, g4 = g34 // G, g34 % G
+    g1, g2 = g12 // G, g12 % G
 
+    zrow = zc_ref[0]  # (G,) exponents
+    crow = zc_ref[1]  # (G,) coefficients
+    z1, z2, z3, z4 = zrow[g1], zrow[g2], zrow[g3], zrow[g4]
+    cc = crow[g1] * crow[g2] * crow[g3] * crow[g4]
+
+    pk = pos_ref[k]  # (4,) dynamic row loads
+    plr = pos_ref[l]
+    kx, ky, kz = pk[0], pk[1], pk[2]
+    lx, ly, lz = plr[0], plr[1], plr[2]
+    dkl = dens_ref[k, l]
+
+    # J: (i j | k l) -> bra pair (i-tile, all-j), ket (k, l) fixed
+    j_tile = _ssss_tile(dt, xi, yi, zi, z1, xj, yj, zj, z2,
+                        kx, ky, kz, z3, lx, ly, lz, z4)
+    # K: (i k | j l) -> bra pair (i-tile, k), ket (all-j, l)
+    k_tile = _ssss_tile(dt, xi, yi, zi, z1, kx, ky, kz, z2,
+                        xj, yj, zj, z3, lx, ly, lz, z4)
+    return cc * dkl * (2.0 * j_tile - k_tile)
+
+
+def _i_tile_coords(pos_i_ref, pos_ref, natoms):
+    N = natoms
     xi = pos_i_ref[:, 0:1]  # (bi, 1) i-tile coordinates
     yi = pos_i_ref[:, 1:2]
     zi = pos_i_ref[:, 2:3]
     xj = pos_ref[:, 0].reshape(1, N)  # (1, N) all-atom coordinates
     yj = pos_ref[:, 1].reshape(1, N)
     zj = pos_ref[:, 2].reshape(1, N)
+    return xi, yi, zi, xj, yj, zj
 
-    def ssss_tile(ax, ay, az, za, bx, by, bz, zb,
-                  cx, cy, cz, zc, dx, dy, dz, zd):
-        """(bi,N)-broadcast ssss integral for one primitive quartet."""
-        p = za + zb
-        q = zc + zd
-        ab2 = (ax - bx) ** 2 + (ay - by) ** 2 + (az - bz) ** 2
-        cd2 = (cx - dx) ** 2 + (cy - dy) ** 2 + (cz - dz) ** 2
-        kab = jnp.exp(-(za * zb / p) * ab2)
-        kcd = jnp.exp(-(zc * zd / q) * cd2)
-        px_, py_, pz_ = ((za * ax + zb * bx) / p, (za * ay + zb * by) / p,
-                         (za * az + zb * bz) / p)
-        qx_, qy_, qz_ = ((zc * cx + zd * dx) / q, (zc * cy + zd * dy) / q,
-                         (zc * cz + zd * dz) / q)
-        pq2 = (px_ - qx_) ** 2 + (py_ - qy_) ** 2 + (pz_ - qz_) ** 2
-        t = (p * q / (p + q)) * pq2
-        pref = dt.type(TWO_PI_POW_2_5) / (p * q * jnp.sqrt(p + q))
-        return pref * kab * kcd * boys_f0(t)
+
+def _twoel_body(pos_i_ref, pos_ref, dens_ref, zc_ref, o_ref, *,
+                natoms: int, ngauss: int):
+    dt = o_ref.dtype
+    coords = _i_tile_coords(pos_i_ref, pos_ref, natoms)
 
     def body(idx, f_tile):
-        # idx enumerates (k, l, g3, g4, g1, g2)
-        kl, g_all = idx // (G * G * G * G), idx % (G * G * G * G)
-        k, l = kl // N, kl % N
-        g34, g12 = g_all // (G * G), g_all % (G * G)
-        g3, g4 = g34 // G, g34 % G
-        g1, g2 = g12 // G, g12 % G
-
-        zrow = zc_ref[0]  # (G,) exponents
-        crow = zc_ref[1]  # (G,) coefficients
-        z1, z2, z3, z4 = zrow[g1], zrow[g2], zrow[g3], zrow[g4]
-        cc = crow[g1] * crow[g2] * crow[g3] * crow[g4]
-
-        pk = pos_ref[k]  # (4,) dynamic row loads
-        plr = pos_ref[l]
-        kx, ky, kz = pk[0], pk[1], pk[2]
-        lx, ly, lz = plr[0], plr[1], plr[2]
-        dkl = dens_ref[k, l]
-
-        # J: (i j | k l) -> bra pair (i-tile, all-j), ket (k, l) fixed
-        j_tile = ssss_tile(xi, yi, zi, z1, xj, yj, zj, z2,
-                           kx, ky, kz, z3, lx, ly, lz, z4)
-        # K: (i k | j l) -> bra pair (i-tile, k), ket (all-j, l)
-        k_tile = ssss_tile(xi, yi, zi, z1, kx, ky, kz, z2,
-                           xj, yj, zj, z3, lx, ly, lz, z4)
-        return f_tile + cc * dkl * (2.0 * j_tile - k_tile)
+        return f_tile + _quartet_term(dt, coords, pos_ref, dens_ref, zc_ref,
+                                      natoms=natoms, ngauss=ngauss,
+                                      nl=natoms, l0=0, idx=idx)
 
     f0 = jnp.zeros(o_ref.shape, dt)
-    total = N * N * G * G * G * G
+    total = natoms * natoms * ngauss ** 4
+    o_ref[...] = jax.lax.fori_loop(0, total, body, f0)
+
+
+def _twoel_slab_body(l0_ref, pos_i_ref, pos_ref, dens_ref, zc_ref, o_ref, *,
+                     natoms: int, ngauss: int, nl: int):
+    dt = o_ref.dtype
+    coords = _i_tile_coords(pos_i_ref, pos_ref, natoms)
+    l0 = l0_ref[0, 0]  # traced slab offset (one value per device)
+
+    def body(idx, f_tile):
+        return f_tile + _quartet_term(dt, coords, pos_ref, dens_ref, zc_ref,
+                                      natoms=natoms, ngauss=ngauss,
+                                      nl=nl, l0=l0, idx=idx)
+
+    f0 = jnp.zeros(o_ref.shape, dt)
+    total = natoms * nl * ngauss ** 4
     o_ref[...] = jax.lax.fori_loop(0, total, body, f0)
 
 
@@ -117,3 +175,40 @@ def twoel_tiled(positions4: jnp.ndarray, density: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((N, N), positions4.dtype),
         interpret=interpret,
     )(positions4, positions4, density, zc)
+
+
+def twoel_slab_tiled(positions4: jnp.ndarray, density: jnp.ndarray,
+                     basis: Basis, l0, nl: int, *, i_tile: int = I_TILE,
+                     interpret: bool = False) -> jnp.ndarray:
+    """Partial Fock build over the quartet slab ``l in [l0, l0+nl)``.
+
+    ``nl`` is static (it sizes the loop); ``l0`` may be traced (each device
+    passes ``axis_index * nl``), carried into the kernel as a (1, 1) scalar
+    operand.  Summing the slabs over a disjoint cover of ``[0, N)``
+    reconstructs the full ``twoel_tiled`` result up to summation order.
+    """
+    N = positions4.shape[0]
+    if N % i_tile:
+        raise ValueError(f"natoms={N} must be a multiple of i_tile={i_tile}")
+    if not 1 <= nl <= N:
+        raise ValueError(f"slab width nl={nl} outside [1, {N}]")
+    G = basis.ngauss
+    zc = jnp.stack([basis.exponents, basis.coefficients]).astype(
+        positions4.dtype)
+    l0a = jnp.asarray(l0, jnp.int32).reshape(1, 1)
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_twoel_slab_body, natoms=N, ngauss=G, nl=nl),
+        grid=(N // i_tile,),
+        in_specs=[
+            whole((1, 1)),                                # slab offset
+            pl.BlockSpec((i_tile, 4), lambda i: (i, 0)),  # i-tile positions
+            whole((N, 4)),                                # all positions
+            whole((N, N)),                                # density
+            whole((2, G)),                                # basis
+        ],
+        out_specs=pl.BlockSpec((i_tile, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, N), positions4.dtype),
+        interpret=interpret,
+    )(l0a, positions4, positions4, density, zc)

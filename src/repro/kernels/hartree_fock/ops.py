@@ -48,6 +48,6 @@ _k.add_backend("pallas_interpret",
 # Fock rows per grid step (sublane height) — must divide natoms
 _k.declare_tunables(
     ("pallas", "pallas_interpret"),
-    i_tile=(4, 8, 16),
+    i_tile=K.I_TILE_GRID,
     constraint=lambda p, positions, *a, **kw:
         positions.shape[0] % p["i_tile"] == 0)

@@ -19,6 +19,7 @@ numerically, mirroring the paper's Mojo plain-old-data workaround.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +31,26 @@ from repro.kernels.minibude.ref import (
 )
 
 POSE_TILE = 128  # poses per grid step (lane width)
+#: declared pose-tile grid (ops.py registers it; sharded composites reuse it)
+POSE_TILE_GRID = (64, 128, 256)
+
+
+def local_pose_tile(nposes_local: int, pose_tile: Optional[int] = None) -> int:
+    """Pose tile for a (possibly sharded) local pose block.  An explicit
+    ``pose_tile`` is validated against the local extent; ``None`` picks the
+    largest declared tile that divides it."""
+    if pose_tile is not None:
+        if nposes_local % pose_tile:
+            raise ValueError(
+                f"pose_tile={pose_tile} does not divide the local pose "
+                f"count {nposes_local}")
+        return pose_tile
+    for cand in sorted(POSE_TILE_GRID, reverse=True):
+        if nposes_local % cand == 0:
+            return cand
+    raise ValueError(
+        f"no declared pose tile {POSE_TILE_GRID} divides the local pose "
+        f"count {nposes_local}")
 
 
 def _fasten_body(ppos_ref, ppar_ref, lpos_ref, lpar_ref, poses_ref, o_ref,

@@ -74,5 +74,5 @@ _k.add_backend("pallas_interpret",
 # PPWI analogue: poses per grid step (lane tile) — must divide nposes
 _k.declare_tunables(
     ("pallas", "pallas_interpret"),
-    pose_tile=(64, 128, 256),
+    pose_tile=K.POSE_TILE_GRID,
     constraint=lambda p, *deck, **kw: deck[4].shape[1] % p["pose_tile"] == 0)

@@ -20,7 +20,7 @@ thread-divergent.  All coefficients are compile-time constants (the Mojo
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +28,31 @@ from jax.experimental import pallas as pl
 
 LANES = 128
 DEFAULT_BY = 64
+#: declared y-tile grid (ops.py registers it; sharded composites reuse it)
+BY_GRID = (8, 16, 32, 64)
+
+
+def local_block_by(ny_local: int, by: Optional[int] = None) -> int:
+    """y-tile height for a (possibly sharded) local block.
+
+    The sharded composite backends tile the *post-shard* local block, so the
+    admissible heights depend on the decomposition: an explicit ``by`` is
+    validated against the local extent (a tile larger than the block can
+    never divide it), ``None`` picks the largest declared tile that does —
+    ``DEFAULT_BY`` whenever the block is the whole domain of the benchmark
+    shapes (ny % 64 == 0).
+    """
+    if by is not None:
+        if ny_local % by:
+            raise ValueError(
+                f"by={by} does not divide the local y extent {ny_local}")
+        return by
+    for cand in sorted(BY_GRID, reverse=True):
+        if ny_local % cand == 0:
+            return cand
+    raise ValueError(
+        f"no declared y-tile {BY_GRID} divides the local y extent "
+        f"{ny_local}")
 
 
 def _stencil_body(zc_ref, zm_ref, zp_ref, ym_ref, yp_ref, o_ref, *,

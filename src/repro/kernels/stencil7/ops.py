@@ -43,5 +43,5 @@ _k.add_backend("pallas_interpret",
 # tile ny exactly — the autotuner sweeps the heights that do.
 _k.declare_tunables(
     ("pallas", "pallas_interpret"),
-    by=(8, 16, 32, 64),
+    by=K.BY_GRID,
     constraint=lambda p, u, *a, **kw: u.shape[1] % p["by"] == 0)

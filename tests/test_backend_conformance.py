@@ -1,0 +1,105 @@
+"""Registry-wide differential conformance suite.
+
+Parametrizes over ``repro.core.conformance.conformance_pairs()`` — the
+(kernel, backend) matrix derived from the *live* registry at collection
+time, never a hand-written list — and asserts every backend matches its
+oracle at the per-kernel tolerance (bitwise where PR 3/4 promised it, plus
+the ``shard_pallas`` composites' bitwise-twin contract against their
+single-device Pallas kernels).  Consequences of deriving from the registry:
+
+  * a backend registered tomorrow (``shard_pallas`` today) gets a matrix
+    cell for free, and dropping a registered backend from coverage is
+    impossible — the parametrization *is* the registry;
+  * a kernel registered without a conformance case FAILS its cells
+    (coverage is mandatory, never silently absent);
+  * backends this host cannot run surface as explicit pytest skips carrying
+    the ``BackendUnavailableError`` reason — never silent passes.  The
+    multi-device cells run for real in ``repro.distributed.selftest``'s
+    ``conformance`` battery under 8 forced host devices.
+"""
+
+import jax
+import pytest
+
+from repro.core import conformance
+from repro.core.portable import (BackendUnavailableError, PortableKernel,
+                                 registry)
+
+PAIRS = conformance.conformance_pairs()
+
+
+@pytest.mark.parametrize(
+    "kernel,backend", PAIRS, ids=[f"{k}-{b}" for k, b in PAIRS])
+def test_backend_matches_oracle(kernel, backend):
+    try:
+        conformance.check_backend(kernel, backend)
+    except BackendUnavailableError as exc:
+        pytest.skip(f"{kernel}[{backend}] unavailable here: {exc}")
+
+
+def test_every_registered_kernel_has_case_and_tolerance():
+    """The coverage guard behind the matrix: a kernel missing from CASES /
+    ORACLE_TOL would fail its cells with a pointed message — this test
+    makes the gap visible as one line instead of N."""
+    for name in registry.names():
+        assert name in conformance.CASES, \
+            f"kernel {name!r} has no conformance case"
+        assert name in conformance.ORACLE_TOL, \
+            f"kernel {name!r} has no conformance tolerance"
+
+
+def test_pairs_derive_from_live_registry():
+    """Registering a backend adds its matrix cell with no suite edit."""
+    k = registry.get("stencil7")
+    assert ("stencil7", "tmp_backend") not in conformance.conformance_pairs()
+    k.add_backend("tmp_backend", k.backends["xla"].fn)
+    try:
+        assert ("stencil7", "tmp_backend") in conformance.conformance_pairs()
+        # it is the oracle's own fn, so its cell passes immediately
+        conformance.check_backend("stencil7", "tmp_backend")
+    finally:
+        del k.backends["tmp_backend"]
+    assert ("stencil7", "tmp_backend") not in conformance.conformance_pairs()
+
+
+def test_missing_case_fails_never_passes():
+    """A kernel without a case must FAIL conformance, not skip or pass."""
+    name = "tmp.caseless"
+    k = PortableKernel(name=name)
+    k.add_backend("xla", lambda x: x)
+    registry._kernels[name] = k
+    try:
+        assert (name, "xla") in conformance.conformance_pairs()
+        with pytest.raises(AssertionError, match="no conformance case"):
+            conformance.check_backend(name, "xla")
+    finally:
+        del registry._kernels[name]
+
+
+@pytest.mark.skipif(jax.device_count() != 1,
+                    reason="asserts the 1-device availability contract")
+def test_unavailable_backend_surfaces_reasoned_error():
+    """The skip path is an explicit BackendUnavailableError naming the
+    backend and the available alternatives — what the parametrized test
+    (and the selftest battery) turn into a reasoned skip."""
+    for backend in ("xla_shard", "shard_pallas"):
+        with pytest.raises(BackendUnavailableError, match=backend):
+            conformance.check_backend("stencil7", backend)
+
+
+def test_bitwise_promises_cover_the_sharded_oracles():
+    """The PR-3/4 bitwise promises stay pinned in the tolerance table, and
+    every bitwise-twin entry points at a registered backend."""
+    for kernel in ("stencil7", "babelstream.copy", "babelstream.mul",
+                   "babelstream.add", "babelstream.triad",
+                   "minibude.fasten"):
+        assert conformance.oracle_tolerance(kernel, "xla_shard") == "bitwise"
+        twin = conformance.BITWISE_TWIN[(kernel, "shard_pallas")]
+        assert twin in registry.get(kernel).backends
+    # reductions are exempt: psum changes their summation order
+    assert conformance.oracle_tolerance("babelstream.dot",
+                                        "xla_shard") != "bitwise"
+    assert ("babelstream.dot", "shard_pallas") not in \
+        conformance.BITWISE_TWIN
+    assert ("hartree_fock.twoel", "shard_pallas") not in \
+        conformance.BITWISE_TWIN

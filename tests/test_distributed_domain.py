@@ -216,11 +216,16 @@ def test_dryrun_import_does_not_clobber_user_flags():
 
 
 # --------------------------------------------------------------------------
-# multi-device battery (subprocess: needs 8 forced host devices)
+# multi-device batteries (subprocess: needs 8 forced host devices).  The
+# full battery set is the slow lane; the tier-1 lane keeps the seconds-scale
+# `--only smoke` single battery.
 # --------------------------------------------------------------------------
+@pytest.mark.slow
 def test_sharded_backends_match_single_device_under_8_devices():
     """stencil7/babelstream/minibude bit-match and dot/HF oracle-match at
-    2/4/8 shards; halo exchange round-trips; constraints honored."""
+    2/4/8 shards; halo exchange round-trips; constraints honored; the
+    shard_pallas composites bit-match their single-device Pallas kernels;
+    the registry-wide conformance matrix validates."""
     out = subprocess.run(
         [sys.executable, "-m", "repro.distributed.selftest", "--devices",
          "8"],
@@ -235,6 +240,39 @@ def test_sharded_backends_match_single_device_under_8_devices():
     assert "wrap=True periodic ring and halo=2" in out.stdout
     assert "scalar is traced" in out.stdout
     assert "tune() sweeps decomp/shard_grid/overlap" in out.stdout
+    assert ("shard_pallas stencil7: bitwise equal to single-device pallas"
+            in out.stdout)
+    assert ("shard_pallas babelstream: elementwise bitwise equal"
+            in out.stdout)
+    assert "shard_pallas minibude: bitwise equal" in out.stdout
+    assert "shard_pallas hartree_fock: l-slab Pallas psum" in out.stdout
+    assert ("shard_pallas tuning: composite tile x shard space sweeps"
+            in out.stdout)
+    assert "conformance:" in out.stdout and "registry cells validated" in \
+        out.stdout
+
+
+def test_selftest_smoke_battery_stays_in_tier1():
+    """`--only smoke` is the fast lane: one sharded-oracle and one
+    sharded-Pallas stencil check, bitwise, in seconds."""
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.selftest", "--devices",
+         "8", "--only", "smoke"],
+        env=_subprocess_env(8), capture_output=True, text=True, timeout=240,
+        cwd=REPO_ROOT)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    assert "selftest ok (1 batteries)" in out.stdout
+    assert "smoke: xla_shard + shard_pallas stencil bitwise" in out.stdout
+
+
+def test_selftest_rejects_unknown_battery():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.distributed.selftest", "--only",
+         "no_such_battery"],
+        env=_subprocess_env(8), capture_output=True, text=True, timeout=240,
+        cwd=REPO_ROOT)
+    assert out.returncode == 2
+    assert "unknown batteries" in out.stderr
 
 
 # --------------------------------------------------------------------------
@@ -274,6 +312,43 @@ def test_scaling_standalone_main_emits_header(capsys, monkeypatch, tmp_path):
     assert seen["smoke"] is True
 
 
+def test_timed_point_drops_cached_params_invalid_for_forced_grid(
+        tmp_path, monkeypatch):
+    """The tuning-cache key does not encode shard settings, so a hit tuned
+    under one grid can carry tile params invalid for another point's forced
+    grid (by=64 from a slab does not divide a pencil's 32-wide local
+    block).  The merged point must be re-validated and the hit dropped —
+    never a ValueError out of the benchmark."""
+    from benchmarks import scaling
+    from repro.distributed import domain
+
+    k = get_kernel("stencil7")
+    u = jnp.ones((64, 64, 128), jnp.float32)
+    # the constraint AND the cache key consult the live device count;
+    # pretend to be the 8-device scaling child this helper runs in (before
+    # building the key — TuningKey embeds the device count)
+    monkeypatch.setattr(domain.jax, "device_count", lambda: 8)
+    cache = tuning.TuningCache(path=str(tmp_path / "t.json"))
+    key = tuning.make_key(k, u, backend="shard_pallas")
+    cache.put(key, {"decomp": "slab", "shard_grid": (8, 1), "by": 64}, 1.0)
+    seen = {}
+    monkeypatch.setattr(
+        type(k), "time_backend",
+        lambda self, *a, **kw: seen.update(kw) or 0.1)
+    forced = {"decomp": "pencil", "shard_grid": (2, 2)}
+    _, prov = scaling._timed_point(k, (u,), "shard_pallas", cache, 1, 0,
+                                   forced)
+    assert prov["cached"] is False and prov["search"] is None
+    assert "by" not in prov["params"] and "by" not in seen
+    assert seen["decomp"] == "pencil" and seen["shard_grid"] == (2, 2)
+    # a hit whose tile params fit the forced grid still merges under it
+    cache.put(key, {"decomp": "slab", "shard_grid": (8, 1), "by": 16}, 1.0)
+    _, prov = scaling._timed_point(k, (u,), "shard_pallas", cache, 1, 0,
+                                   forced)
+    assert prov["cached"] is True and prov["params"]["by"] == 16
+    assert seen["by"] == 16 and seen["decomp"] == "pencil"
+
+
 def test_balanced_pencil_grid_policy():
     """One picker serves the registry AND the scaling benchmark, so the
     recorded per-point shard_grid always matches what the registry would
@@ -308,34 +383,47 @@ def test_scaling_benchmark_smoke_writes_artifact(tmp_path):
     artifact = scaling.run(smoke=True, json_path=json_path, devices=4)
 
     on_disk = json.loads((tmp_path / "BENCH_scaling.json").read_text())
-    assert on_disk["schema"] == "repro.scaling/v2"
+    assert on_disk["schema"] == "repro.scaling/v3"
     assert on_disk["num_devices"] >= 2
     by_name = {r["kernel"]: r for r in artifact["kernels"]}
     for name in ("stencil7", "babelstream.triad", "babelstream.dot"):
         rec = by_name[name]
-        assert rec["skipped"] is None
-        for curve in rec["curves"]:
-            for lane in ("strong", "weak"):
-                pts = curve[lane]["points"]
-                assert pts and all(
-                    np.isfinite(p["efficiency"]) and p["efficiency"] > 0
-                    for p in pts)
-                # every point records its tuning provenance (PR-2 rules:
-                # params may come from the cache, the timing never does)
-                assert all(set(p["tuning"]) == {"cached", "params",
-                                                "search"} for p in pts)
-    # stencil7 carries the slab-vs-pencil decomposition axis
-    stencil = {(c["decomp"], c["overlap"]): c
-               for c in by_name["stencil7"]["curves"]}
-    assert set(stencil) == {("slab", False), ("slab", True),
-                            ("pencil", False), ("pencil", True)}
-    pencil_pts = stencil[("pencil", False)]["strong"]["points"]
+        # v3: the per-backend dimension — xla_shard AND shard_pallas curves
+        backends = {b["backend"]: b for b in rec["backends"]}
+        assert set(backends) == {"xla_shard", "shard_pallas"}
+        for brec in backends.values():
+            assert brec["skipped"] is None, (name, brec)
+            assert brec["curves"]
+            for curve in brec["curves"]:
+                for lane in ("strong", "weak"):
+                    pts = curve[lane]["points"]
+                    assert pts and all(
+                        np.isfinite(p["efficiency"]) and p["efficiency"] > 0
+                        for p in pts)
+                    # every point records its tuning provenance (PR-2
+                    # rules: params may come from the cache, the timing
+                    # never does)
+                    assert all(set(p["tuning"]) == {"cached", "params",
+                                                    "search"} for p in pts)
+    # stencil7 carries the slab-vs-pencil decomposition axis: overlap
+    # on/off for the oracle lanes, a single structure for the composite
+    stencil = {b["backend"]: b for b in by_name["stencil7"]["backends"]}
+    xs = {(c["decomp"], c["overlap"]) for c in
+          stencil["xla_shard"]["curves"]}
+    assert xs == {("slab", False), ("slab", True),
+                  ("pencil", False), ("pencil", True)}
+    ps = {(c["decomp"], c["overlap"]) for c in
+          stencil["shard_pallas"]["curves"]}
+    assert ps == {("slab", None), ("pencil", None)}
+    pencil_pts = [c for c in stencil["shard_pallas"]["curves"]
+                  if c["decomp"] == "pencil"][0]["strong"]["points"]
     assert [tuple(p["shard_grid"]) for p in pencil_pts] == [(2, 2)]
     # HF records a reason for its missing weak curve, never a fake one
-    assert "skipped" in by_name["hartree_fock.twoel"]["curves"][0]["weak"]
+    hf = by_name["hartree_fock.twoel"]["backends"][0]
+    assert "skipped" in hf["curves"][0]["weak"]
     # the re-exec child's CSV rows were replayed into the parent's ROWS
     new_rows = common.ROWS[rows_before:]
-    assert any(n.startswith("scaling.stencil7.pencil") for n, _, _ in
-               new_rows)
-    assert any(n.startswith("scaling.babelstream.dot") for n, _, _ in
-               new_rows)
+    assert any(n.startswith("scaling.stencil7.shard_pallas.pencil")
+               for n, _, _ in new_rows)
+    assert any(n.startswith("scaling.babelstream.dot.xla_shard")
+               for n, _, _ in new_rows)

@@ -1,0 +1,175 @@
+"""Property-based invariants for the decomposition helpers and the
+composite tile x shard tunable spaces.
+
+Runs under real ``hypothesis`` when installed; on minimal hosts the
+deterministic shim (``tests/_hypothesis_stub.py``, installed by conftest)
+replays the strategy edges plus seeded draws, so the properties hold in
+both lanes.  Every helper takes an injected ``device_count``, so the
+invariants are checked for hypothetical topologies regardless of the
+1-device pytest process.
+"""
+
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import repro.kernels  # noqa: F401  (registers the sharded backends)
+from repro.core.portable import get_kernel
+from repro.distributed import shard_pallas as sp
+from repro.distributed.domain import (balanced_pencil_grid,
+                                      resolve_num_shards,
+                                      resolve_shard_grid)
+
+LANES = 128
+
+
+# --------------------------------------------------------------------------
+# decomposition helpers
+# --------------------------------------------------------------------------
+@settings(max_examples=25)
+@given(total=st.integers(min_value=2, max_value=96))
+def test_balanced_pencil_grid_product_and_balance(total):
+    g = balanced_pencil_grid(total)
+    factorizations = [(total // sy, sy) for sy in range(2, total // 2 + 1)
+                      if total % sy == 0 and total // sy >= 2]
+    if g is None:
+        # None exactly when no true 2-D grid exists (both factors >= 2)
+        assert not factorizations
+        return
+    sz, sy = g
+    assert sz * sy == total and sz >= 2 and sy >= 2
+    # most balanced wins; ties prefer the z-major grid
+    best = min(abs(a - b) for a, b in factorizations)
+    assert abs(sz - sy) == best
+    if any((b, a) == (sz, sy) for a, b in factorizations if a != b):
+        assert sz >= sy
+
+
+@settings(max_examples=25)
+@given(total=st.integers(min_value=2, max_value=96),
+       nz=st.sampled_from([2, 4, 6, 8, 12, 16, 24, 32]),
+       ny=st.sampled_from([2, 3, 4, 8, 9, 16, 32]))
+def test_balanced_pencil_grid_divisibility(total, nz, ny):
+    g = balanced_pencil_grid(total, nz, ny)
+    if g is None:
+        # every candidate factorization violates a divisibility bound
+        assert all(nz % a or ny % b
+                   for b in range(2, total // 2 + 1) if total % b == 0
+                   for a in [total // b] if a >= 2)
+        return
+    sz, sy = g
+    assert sz * sy == total and sz >= 2 and sy >= 2
+    assert nz % sz == 0 and ny % sy == 0
+
+
+@settings(max_examples=25)
+@given(extent=st.integers(min_value=2, max_value=64),
+       dc=st.integers(min_value=2, max_value=16))
+def test_resolve_num_shards_picks_largest_valid(extent, dc):
+    try:
+        s = resolve_num_shards(extent, None, device_count=dc)
+    except ValueError:
+        assert all(extent % c for c in range(2, min(dc, extent) + 1))
+        return
+    assert 2 <= s <= dc and extent % s == 0
+    # maximal: nothing between s and the device budget divides the extent
+    assert all(extent % c for c in range(s + 1, min(dc, extent) + 1))
+
+
+@settings(max_examples=25)
+@given(nz=st.sampled_from([4, 8, 16, 32]), ny=st.sampled_from([4, 8, 16, 32]),
+       dc=st.integers(min_value=2, max_value=16),
+       decomp=st.sampled_from(["slab", "pencil"]))
+def test_resolve_shard_grid_invariants(nz, ny, dc, decomp):
+    try:
+        sz, sy = resolve_shard_grid(nz, ny, decomp=decomp, device_count=dc)
+    except ValueError:
+        return  # no valid grid on this hypothetical host
+    assert nz % sz == 0 and ny % sy == 0
+    assert 2 <= sz * sy <= dc
+    if decomp == "slab":
+        # slab is the sy == 1 special case of the grid resolution, and its
+        # z split is exactly resolve_num_shards
+        assert sy == 1
+        assert sz == resolve_num_shards(nz, None, device_count=dc)
+    else:
+        assert sz >= 2 and sy >= 2
+
+
+# --------------------------------------------------------------------------
+# composite tile x shard spaces: every emitted point satisfies every
+# cross-constraint, and the filter is EXACTLY the declared predicate
+# --------------------------------------------------------------------------
+@settings(max_examples=15)
+@given(nz=st.sampled_from([4, 8, 16]), ny=st.sampled_from([8, 16, 32, 64]),
+       dc=st.integers(min_value=2, max_value=12))
+def test_stencil_composite_space_cross_constraints(nz, ny, dc):
+    u = np.zeros((nz, ny, LANES), np.float32)
+    space = get_kernel("stencil7").tunable_space("shard_pallas")
+    pts = space.valid_points(u, device_count=dc)
+    for p in pts:
+        sz, sy = p["shard_grid"]
+        assert 2 <= sz * sy <= dc
+        assert nz % sz == 0 and ny % sy == 0
+        # the tile tunable binds against the LOCAL (post-shard) block:
+        # oversized tiles can never divide it
+        assert p["by"] <= ny // sy
+        assert (ny // sy) % p["by"] == 0
+        if p["decomp"] == "pencil":
+            assert sz >= 2 and sy >= 2
+        else:
+            assert sy == 1
+    expect = [p for p in space.points()
+              if sp.stencil_pallas_point_ok(p, nz, ny, dc)]
+    assert pts == expect
+
+
+@settings(max_examples=15)
+@given(n=st.sampled_from([1 << 14, 1 << 15, 1 << 16, 1 << 17,
+                          3 * (1 << 14)]),
+       dc=st.integers(min_value=2, max_value=12))
+def test_stream_composite_space_cross_constraints(n, dc):
+    a = np.zeros((n,), np.float32)
+    space = get_kernel("babelstream.triad").tunable_space("shard_pallas")
+    pts = space.valid_points(a, device_count=dc)
+    for p in pts:
+        s, br = p["num_shards"], p["block_rows"]
+        assert 2 <= s <= dc and n % s == 0
+        assert (n // s) % (br * LANES) == 0
+    expect = [p for p in space.points()
+              if sp.stream_pallas_point_ok(p, n, dc)]
+    assert pts == expect
+
+
+@settings(max_examples=15)
+@given(nposes=st.sampled_from([128, 256, 512, 1024]),
+       dc=st.integers(min_value=2, max_value=12))
+def test_bude_composite_space_cross_constraints(nposes, dc):
+    deck = [None] * 4 + [np.zeros((6, nposes), np.float32)]
+    space = get_kernel("minibude.fasten").tunable_space("shard_pallas")
+    pts = space.valid_points(*deck, device_count=dc)
+    for p in pts:
+        s, pt = p["num_shards"], p["pose_tile"]
+        assert 2 <= s <= dc and nposes % s == 0
+        assert pt <= nposes // s and (nposes // s) % pt == 0
+    expect = [p for p in space.points()
+              if sp.bude_pallas_point_ok(p, nposes, dc)]
+    assert pts == expect
+
+
+@settings(max_examples=15)
+@given(natoms=st.sampled_from([4, 8, 12, 16]),
+       dc=st.integers(min_value=2, max_value=12))
+def test_hf_composite_space_cross_constraints(natoms, dc):
+    pos = np.zeros((natoms, 3), np.float32)
+    space = get_kernel("hartree_fock.twoel").tunable_space("shard_pallas")
+    pts = space.valid_points(pos, device_count=dc)
+    for p in pts:
+        s, it = p["num_shards"], p["i_tile"]
+        assert 2 <= s <= dc and natoms % s == 0
+        # Fock rows stay whole under the l-slab split, so i_tile binds
+        # against the full atom count — and never exceeds it
+        assert it <= natoms and natoms % it == 0
+    expect = [p for p in space.points()
+              if sp.hf_pallas_point_ok(p, natoms, dc)]
+    assert pts == expect

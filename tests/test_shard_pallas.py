@@ -1,0 +1,206 @@
+"""shard_pallas composite backends: registry wiring, local-tile helpers,
+and the tunable-space validity audit (tile points larger than the local
+post-shard block must be rejected, pinned at the one-plane-per-shard and
+smallest-``by`` edges).
+
+The multi-device *execution* checks — bitwise equality to the single-device
+Pallas backends under 8 forced host devices — live in
+``repro.distributed.selftest`` (``shard_pallas_*`` batteries) because this
+pytest process is pinned to the 1-device topology.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.kernels  # noqa: F401  (registers the sharded backends)
+from repro.core import tuning
+from repro.core.portable import BackendUnavailableError, get_kernel
+from repro.distributed import shard_pallas as sp
+from repro.distributed.domain import SHARD_GRID, STENCIL_SHARD_GRIDS
+from repro.kernels.babelstream import kernel as stream_K
+from repro.kernels.hartree_fock import kernel as hf_K
+from repro.kernels.minibude import kernel as mb_K
+from repro.kernels.stencil7 import kernel as s7_K
+
+SHARDED_KERNELS = ["stencil7", "babelstream.copy", "babelstream.mul",
+                   "babelstream.add", "babelstream.triad", "babelstream.dot",
+                   "minibude.fasten", "hartree_fock.twoel"]
+
+#: family -> the tile axis its composite space shares with the
+#: single-device pallas space
+TILE_AXES = {
+    "stencil7": ("by", s7_K.BY_GRID),
+    "babelstream": ("block_rows", stream_K.BLOCK_ROWS_GRID),
+    "minibude.fasten": ("pose_tile", mb_K.POSE_TILE_GRID),
+    "hartree_fock.twoel": ("i_tile", hf_K.I_TILE_GRID),
+}
+
+
+# --------------------------------------------------------------------------
+# registry wiring
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", SHARDED_KERNELS)
+def test_registered_with_composite_tile_x_shard_space(name):
+    k = get_kernel(name)
+    assert sp.PALLAS_SHARD_BACKEND in k.backends, name
+    space = k.tunable_space(sp.PALLAS_SHARD_BACKEND)
+    assert space is not None
+    family = name.split(".")[0] if name.startswith("babelstream") else name
+    tile, grid = TILE_AXES[family]
+    if name == "stencil7":
+        # decomposition axes compose with the y-tile in ONE space
+        assert set(space.params) == {"decomp", "shard_grid", "by"}
+        assert tuple(space.params["shard_grid"]) == STENCIL_SHARD_GRIDS
+    else:
+        assert set(space.params) == {"num_shards", tile}
+        assert tuple(space.params["num_shards"]) == SHARD_GRID
+    # the tile axis IS the single-device pallas grid — same kernel source,
+    # same tunables, now composed with the shard axes
+    assert tuple(space.params[tile]) == tuple(grid)
+    assert tuple(space.params[tile]) == \
+        tuple(k.tunable_space("pallas_interpret").params[tile])
+
+
+@pytest.mark.skipif(jax.device_count() != 1,
+                    reason="asserts the 1-device availability contract")
+def test_unavailable_on_single_device():
+    k = get_kernel("stencil7")
+    assert not k.backends[sp.PALLAS_SHARD_BACKEND].is_available()
+    assert sp.PALLAS_SHARD_BACKEND not in k.available_backends()
+    assert k.default_backend() != sp.PALLAS_SHARD_BACKEND
+    with pytest.raises(BackendUnavailableError):
+        k.time_backend(jnp.ones((4, 8, 128)),
+                       backend=sp.PALLAS_SHARD_BACKEND, iters=1, warmup=0)
+    r = tuning.tune(k, jnp.ones((4, 8, 128)),
+                    backend=sp.PALLAS_SHARD_BACKEND)
+    assert r.skipped is not None and "unavailable" in r.skipped
+
+
+def test_availability_composes_multi_device_and_execution_tier():
+    # multi_device() is False here, so the conjunction is False regardless
+    # of the execution tier; the tier predicate itself is True (interpret
+    # mode runs on any live jax backend)
+    assert sp._interpret_capable()
+    assert sp.default_interpret() == (not jax.devices()[0].platform == "tpu")
+    if jax.device_count() == 1:
+        assert not sp.shard_pallas_available()
+
+
+# --------------------------------------------------------------------------
+# local-tile helpers (the kernel-layer local-block entry points)
+# --------------------------------------------------------------------------
+def test_local_block_by_picks_and_validates():
+    assert s7_K.local_block_by(64) == 64
+    assert s7_K.local_block_by(32) == 32
+    assert s7_K.local_block_by(24) == 8
+    assert s7_K.local_block_by(64, 16) == 16
+    with pytest.raises(ValueError, match="does not divide"):
+        s7_K.local_block_by(32, 64)  # tile larger than the local block
+    with pytest.raises(ValueError, match="no declared y-tile"):
+        s7_K.local_block_by(4)
+
+
+def test_local_block_rows_picks_and_validates():
+    assert stream_K.local_block_rows(1024 * 128) == 1024
+    assert stream_K.local_block_rows(128 * 128) == 128
+    assert stream_K.local_block_rows(1024 * 128, 256) == 256
+    with pytest.raises(ValueError, match="does not tile"):
+        stream_K.local_block_rows(128 * 128, 256)
+    with pytest.raises(ValueError, match="no declared row tile"):
+        stream_K.local_block_rows(64 * 128)
+
+
+def test_local_pose_tile_and_i_tile():
+    assert mb_K.local_pose_tile(256) == 256
+    assert mb_K.local_pose_tile(192) == 64
+    assert mb_K.local_pose_tile(256, 64) == 64
+    with pytest.raises(ValueError):
+        mb_K.local_pose_tile(32)
+    assert hf_K.local_i_tile(16) == 16
+    assert hf_K.local_i_tile(8) == 8
+    assert hf_K.local_i_tile(8, 4) == 4
+    with pytest.raises(ValueError):
+        hf_K.local_i_tile(8, 16)  # tile larger than the row count
+
+
+# --------------------------------------------------------------------------
+# validity audit: tiles never exceed the local (post-shard) block extent
+# --------------------------------------------------------------------------
+def _stencil_points(u, dc=8):
+    space = get_kernel("stencil7").tunable_space(sp.PALLAS_SHARD_BACKEND)
+    return space.valid_points(u, device_count=dc)
+
+
+def test_stencil_space_rejects_tiles_larger_than_local_block():
+    u = np.zeros((8, 16, 128), np.float32)
+    pts = _stencil_points(u)
+    assert pts
+    for p in pts:
+        assert p["by"] <= 16 // p["shard_grid"][1]
+    # pencil (2,4) leaves a 4-wide local block: below every declared tile,
+    # so that grid vanishes from the space entirely
+    assert all(p["shard_grid"] != (2, 4) for p in pts)
+    # (2,2)/(4,2) leave 8: only the smallest tile survives
+    assert {p["by"] for p in pts if p["shard_grid"] == (2, 2)} == {8}
+    # slab keeps the full ny=16
+    assert {p["by"] for p in pts if p["decomp"] == "slab"} == {8, 16}
+
+
+def test_stencil_space_one_plane_per_shard_edge():
+    """nz == total shards leaves one z plane per shard — a legal block for
+    the padded-slab composite, so the point must survive the audit."""
+    u = np.zeros((8, 64, 128), np.float32)
+    pts = _stencil_points(u)
+    assert {"decomp": "slab", "shard_grid": (8, 1), "by": 64} in pts
+    assert {p["by"] for p in pts if p["shard_grid"] == (8, 1)} == \
+        {8, 16, 32, 64}
+
+
+def test_stencil_space_smallest_by_edge():
+    """ny == smallest declared tile: exactly one y-tile survives, on slab
+    grids only (any pencil split would undercut the smallest tile)."""
+    u = np.zeros((8, 8, 128), np.float32)
+    pts = _stencil_points(u)
+    assert pts and all(p["by"] == 8 for p in pts)
+    assert all(p["decomp"] == "slab" for p in pts)
+
+
+def test_stream_space_rejects_oversized_block_rows():
+    # 2^16 elements: 8 shards leave 64 rows per shard — below the smallest
+    # declared row tile, so num_shards=8 vanishes; 2 and 4 survive with
+    # the tiles that still fit
+    n = 1 << 16
+    a = np.zeros((n,), np.float32)
+    space = get_kernel("babelstream.triad").tunable_space(
+        sp.PALLAS_SHARD_BACKEND)
+    pts = space.valid_points(a, device_count=8)
+    assert pts
+    assert all(p["num_shards"] != 8 for p in pts)
+    for p in pts:
+        assert (n // p["num_shards"]) % (p["block_rows"] * 128) == 0
+    assert {p["block_rows"] for p in pts if p["num_shards"] == 4} == {128}
+
+
+def test_hf_space_rejects_i_tile_larger_than_atoms():
+    pos = np.zeros((8, 3), np.float32)
+    space = get_kernel("hartree_fock.twoel").tunable_space(
+        sp.PALLAS_SHARD_BACKEND)
+    pts = space.valid_points(pos, device_count=8)
+    assert pts
+    assert all(p["i_tile"] <= 8 for p in pts)
+    assert {p["num_shards"] for p in pts} == {2, 4, 8}
+
+
+def test_single_device_pallas_space_still_guards_whole_domain():
+    """The audit covers the unsharded spaces too: the single-device pallas
+    grid must reject tiles larger than the (whole-domain) extent."""
+    u = np.zeros((8, 16, 128), np.float32)
+    pts = get_kernel("stencil7").tunable_space("pallas_interpret") \
+        .valid_points(u)
+    assert pts and all(p["by"] <= 16 for p in pts)
+    deck = [None] * 4 + [np.zeros((6, 128), np.float32)]
+    pts = get_kernel("minibude.fasten").tunable_space("pallas_interpret") \
+        .valid_points(*deck)
+    assert pts and all(p["pose_tile"] <= 128 for p in pts)
