@@ -3,6 +3,14 @@
 Not a paper table — this exercises the LM substrate end to end on CPU
 (dense + MoE + SSM + hybrid) so regressions in the framework itself are
 visible in CI.  Derived: tokens/s on this host.
+
+Decode rows carry one extra dimension since PR 6: the attention backend.
+Each timed row states which registry backend the compiled program actually
+dispatched to and the tuning provenance of its block sizes
+(``exhaustive``/``coordinate`` from the tuning cache, ``miss-default`` for
+declared defaults) — read at trace time from
+``models/attention.dispatch_log()`` instead of silently timing whatever
+dispatch picked.  Attention-free archs (rwkv) time the single ``xla`` row.
 """
 
 from __future__ import annotations
@@ -12,6 +20,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.configs import get_config
+from repro.core.portable import on_tpu
+from repro.models import attention as A
 from repro.models import transformer as T
 from repro.training.serve_step import decode_step
 from repro.training.train_step import TrainConfig, make_train_state, train_step
@@ -20,8 +30,18 @@ ARCHS = ["granite-3-8b", "deepseek-moe-16b", "rwkv6-3b", "hymba-1.5b"]
 B, S = 4, 64
 
 
+def _decode_provenance() -> str:
+    d = A.dispatch_log().get("decode", {})
+    bk = d.get("backend", "xla")
+    if d.get("fallback"):
+        return f"attn={bk}(fallback)"
+    tuning = d.get("tuning", "n/a")
+    return f"attn={bk}" + (f" tuning={tuning}" if bk != "xla" else "")
+
+
 def run() -> None:
     key = jax.random.PRNGKey(0)
+    attn_backends = [None, "pallas" if on_tpu() else "pallas_interpret"]
     for arch in ARCHS:
         cfg = get_config(arch, smoke=True)
         params = T.init_params(cfg, key)
@@ -36,12 +56,18 @@ def run() -> None:
         t = time_call(step, state, batch, iters=5)
         emit(f"lm.train.{arch}", t, f"{B*S/t:.0f}tok/s")
 
-        caches = T.init_caches(cfg, B, 64)
-        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
-        pos = jnp.zeros((B, 1), jnp.int32)
-        dec = jax.jit(lambda p, t_, po, c: decode_step(p, cfg, t_, po, c))
-        t = time_call(dec, params, tok, pos, caches, iters=5)
-        emit(f"lm.decode.{arch}", t, f"{B/t:.0f}tok/s")
+        backends = [None] if cfg.attention_free else attn_backends
+        for bk in backends:
+            label = bk or "xla"
+            caches = T.init_caches(cfg, B, 64)
+            tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+            pos = jnp.zeros((B, 1), jnp.int32)
+            A.reset_dispatch_log()
+            dec = jax.jit(lambda p, t_, po, c, _bk=bk: decode_step(
+                p, cfg, t_, po, c, attn_backend=_bk))
+            t = time_call(dec, params, tok, pos, caches, iters=5)
+            emit(f"lm.decode.{arch}[{label}]", t,
+                 f"{B/t:.0f}tok/s {_decode_provenance()}")
 
 
 if __name__ == "__main__":

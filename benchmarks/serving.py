@@ -1,24 +1,40 @@
-"""Serving-engine benchmark: throughput + per-request latency under load.
+"""Serving-engine benchmark: throughput + latency, per attention backend.
 
 Drives the fixed-shape continuous-batching engine with a Poisson-ish
-synthetic arrival trace (repro/serving/trace.py) on a smoke-size model and
-emits one row:
+synthetic arrival trace (repro/serving/trace.py) on a smoke-size model,
+once per attention backend — the plain-XLA oracle first (the before), then
+the Pallas registry path (compiled on TPU, interpret elsewhere — the
+after).  Each backend emits one row:
 
-    serving,<us_per_decode_step>,<tok/s + p50/p95 request latency>
+    serving[<backend>],<us_per_decode_step>,<tok/s + TTFT + latency + attn
+    dispatch provenance>
+
+The dispatch provenance comes from ``models/attention.dispatch_log()``,
+captured at trace time while the engine compiles its two programs: which
+registry backend each program actually dispatched to and whether its block
+sizes came from the tuning cache (``exhaustive``/``coordinate``) or the
+declared defaults (``miss-default``).
 
 A small warmup trace triggers the two compiles (one prefill shape, one
 decode shape) before timing; the measured run must not retrace — the row is
-annotated `RETRACED` if it does, since that invalidates the timing.
+annotated `RETRACED` if it does, since that invalidates the timing.  A
+machine-readable artifact is written to ``BENCH_serving.json`` (schema
+``repro.serving/v2``; v1 was the single pre-PR-6 CSV row with no backend
+dimension).
 """
 
 from __future__ import annotations
 
+import json
 import time
+from typing import Any, Dict
 
 import jax
 
 from benchmarks.common import emit
 from repro.configs import get_config
+from repro.core.portable import on_tpu
+from repro.models import attention as A
 from repro.models import transformer as T
 from repro.serving import ServingEngine, latency_summary, synthetic_trace
 
@@ -26,26 +42,40 @@ ARCH = "granite-3-8b"
 NUM_SLOTS = 4
 CACHE_LEN = 64
 PREFILL_LEN = 16
-N_REQUESTS = 24
 RATE_RPS = 50.0
 MAX_NEW = 16
+ARTIFACT = "BENCH_serving.json"
+SCHEMA = "repro.serving/v2"
 
 
-def run() -> None:
-    cfg = get_config(ARCH, smoke=True)
-    params = T.init_params(cfg, jax.random.PRNGKey(0))
+def _prov(log: Dict[str, Dict[str, Any]], kind: str) -> str:
+    d = log.get(kind, {})
+    bk = d.get("backend", "?")
+    if d.get("fallback"):
+        return f"{kind}={bk}(fallback)"
+    tuning = d.get("tuning", "?")
+    return f"{kind}={bk}" + (f"/{tuning}" if bk != "xla" else "")
+
+
+def _one_backend(params, cfg, backend: str, n_requests: int
+                 ) -> Dict[str, Any]:
+    A.reset_dispatch_log()
     eng = ServingEngine(params, cfg, num_slots=NUM_SLOTS,
-                        cache_len=CACHE_LEN, prefill_len=PREFILL_LEN)
+                        cache_len=CACHE_LEN, prefill_len=PREFILL_LEN,
+                        attn_backend=backend)
 
     warm = synthetic_trace(NUM_SLOTS, vocab_size=cfg.vocab_size, rate=1e6,
                            max_prompt=PREFILL_LEN, max_new_tokens=4,
                            seed=7, uid_base=10_000)
     eng.run(warm)
+    # both programs are compiled now; the dispatch log holds what each
+    # traced — snapshot before the timed run (which must not retrace)
+    log = A.dispatch_log()
     traces_before = (eng.stats["prefill_traces"], eng.stats["decode_traces"])
     steps_before = eng.stats["decode_steps"]
     toks_before = eng.stats["tokens_generated"]
 
-    trace = synthetic_trace(N_REQUESTS, vocab_size=cfg.vocab_size,
+    trace = synthetic_trace(n_requests, vocab_size=cfg.vocab_size,
                             rate=RATE_RPS, max_prompt=PREFILL_LEN,
                             max_new_tokens=MAX_NEW, seed=1)
     t0 = time.perf_counter()
@@ -58,9 +88,56 @@ def run() -> None:
     retraced = (eng.stats["prefill_traces"],
                 eng.stats["decode_traces"]) != traces_before
     derived = (f"{toks / wall:.1f} tok/s "
-               f"p50 {lat['p50_latency_s'] * 1e3:.1f} ms "
+               f"ttft p50 {lat['p50_ttft_s'] * 1e3:.1f} ms "
+               f"p95 {lat['p95_ttft_s'] * 1e3:.1f} ms "
+               f"lat p50 {lat['p50_latency_s'] * 1e3:.1f} ms "
                f"p95 {lat['p95_latency_s'] * 1e3:.1f} ms "
-               f"({N_REQUESTS} reqs @ {RATE_RPS:.0f} rps "
-               f"slots={NUM_SLOTS})"
+               f"({n_requests} reqs @ {RATE_RPS:.0f} rps "
+               f"slots={NUM_SLOTS}) "
+               f"{_prov(log, 'prefill')} {_prov(log, 'decode')}"
                + (" RETRACED" if retraced else ""))
-    emit("serving", wall / max(steps, 1), derived)
+    emit(f"serving[{backend}]", wall / max(steps, 1), derived)
+    return {
+        "backend": backend,
+        "resolved": dict(eng.attn_backends),
+        "tok_s": toks / wall,
+        "us_per_decode_step": wall / max(steps, 1) * 1e6,
+        "ttft_p50_ms": lat["p50_ttft_s"] * 1e3,
+        "ttft_p95_ms": lat["p95_ttft_s"] * 1e3,
+        "latency_p50_ms": lat["p50_latency_s"] * 1e3,
+        "latency_p95_ms": lat["p95_latency_s"] * 1e3,
+        "requests": n_requests,
+        "retraced": retraced,
+        "dispatch": log,
+    }
+
+
+def run(smoke: bool = False, json_path: str = ARTIFACT) -> Dict[str, Any]:
+    cfg = get_config(ARCH, smoke=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    # before: the status-quo plain-XLA path; after: the registry Pallas
+    # kernels (compiled on TPU, interpret mode on a CPU host — relative
+    # numbers only there, see benchmarks/common.py)
+    backends = ["xla", "pallas" if on_tpu() else "pallas_interpret"]
+    n_requests = 8 if smoke else 24
+
+    rows = [_one_backend(params, cfg, bk, n_requests) for bk in backends]
+
+    artifact = {
+        "schema": SCHEMA,
+        "arch": ARCH,
+        "smoke": bool(smoke),
+        "platform": jax.devices()[0].platform,
+        "num_slots": NUM_SLOTS,
+        "cache_len": CACHE_LEN,
+        "prefill_len": PREFILL_LEN,
+        "rows": rows,
+    }
+    with open(json_path, "w") as f:
+        json.dump(artifact, f, indent=1, sort_keys=True)
+    return artifact
+
+
+if __name__ == "__main__":
+    run()

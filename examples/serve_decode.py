@@ -11,6 +11,13 @@ prefill shape with pads masked out of attention (no attending over pad
 token 0), decode positions track each request's TRUE prompt length, and
 every request samples from its own PRNG key stream (no repeated
 continuations across batches).
+
+``--attn-backend`` picks the registry attention backend the two compiled
+programs dispatch to (``xla`` oracle / ``pallas`` on TPU /
+``pallas_interpret`` host-sim — see models/attention).  After serving, two
+finished greedy requests are replayed through the *unbatched*
+``serve_step.generate`` loop under the same backend and the token-level
+bit-match result is printed.
 """
 
 from __future__ import annotations
@@ -19,10 +26,13 @@ import argparse
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import transformer as T
 from repro.serving import ServingEngine, latency_summary, synthetic_trace
+from repro.training import serve_step as SS
 
 
 def main() -> None:
@@ -36,6 +46,10 @@ def main() -> None:
     ap.add_argument("--rate", type=float, default=50.0,
                     help="mean request arrival rate (requests/second)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["xla", "pallas", "pallas_interpret"],
+                    help="registry attention backend (default: plain-XLA "
+                         "oracle path; REPRO_ATTN_BACKEND overrides)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -43,7 +57,11 @@ def main() -> None:
     engine = ServingEngine(params, cfg, num_slots=args.slots,
                            cache_len=args.cache_len,
                            prefill_len=args.prefill_len,
-                           temperature=args.temperature)
+                           temperature=args.temperature,
+                           attn_backend=args.attn_backend)
+    print(f"attention dispatch: requested={args.attn_backend or 'auto'} "
+          f"resolved prefill={engine.attn_backends['prefill']} "
+          f"decode={engine.attn_backends['decode']}")
 
     trace = synthetic_trace(args.requests, vocab_size=cfg.vocab_size,
                             rate=args.rate, max_prompt=args.prefill_len,
@@ -68,6 +86,22 @@ def main() -> None:
           f"({s['prefill_calls']} prefills, {s['decode_steps']} decode steps)")
     assert s["prefill_traces"] == 1 and s["decode_traces"] == 1, \
         "engine recompiled — fixed-shape contract violated"
+
+    if args.temperature == 0.0:
+        # oracle-vs-Pallas dispatch demo: replay two finished requests
+        # through the unbatched generate loop under the SAME backend — the
+        # batched↔unbatched greedy bit-match must hold per backend
+        for req in sorted(done, key=lambda r: r.uid)[:2]:
+            want = SS.generate(params, engine.cfg,
+                               jnp.asarray(np.asarray(req.prompt)[None]),
+                               max_new_tokens=len(req.generated),
+                               cache_len=args.cache_len,
+                               attn_backend=args.attn_backend)
+            match = req.generated == list(np.asarray(want[0]))
+            print(f"bit-match vs unbatched greedy (req {req.uid}, "
+                  f"backend={engine.attn_backends['decode']}): "
+                  f"{'OK' if match else 'MISMATCH'}")
+            assert match, "batched decode diverged from unbatched"
 
 
 if __name__ == "__main__":

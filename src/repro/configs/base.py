@@ -75,6 +75,13 @@ class ModelConfig:
     # traffic AND stops XLA sinking TP all-reduces past the fp32 upcast
     norm_bf16_mul: bool = False
 
+    # --- serving attention dispatch ---
+    # registry backend for self-attention ("xla" | "pallas" |
+    # "pallas_interpret"); None = status-quo plain-XLA path.  The
+    # REPRO_ATTN_BACKEND env var overrides this at trace time, and
+    # unavailable Pallas backends fall back to XLA (see models/attention).
+    attn_backend: Optional[str] = None
+
     # ------------------------------------------------------------------
     @property
     def padded_vocab(self) -> int:

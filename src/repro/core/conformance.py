@@ -78,6 +78,23 @@ def _flash_case():
                  for _ in range(3)), {}
 
 
+def _decode_case():
+    """Single-query decode against a ring-buffer cache that exercises both
+    hard edges at once: row 0 has wrapped (slot order != position order),
+    row 1 has empty slots (pos -1 holes)."""
+    import jax.numpy as jnp
+    r = np.random.default_rng(4)
+    b, h, kv, t, dh = 2, 4, 2, 128, 64
+    q = _f32(r.standard_normal((b, 1, h, dh)) * 0.5)
+    k = _f32(r.standard_normal((b, t, kv, dh)) * 0.5)
+    v = _f32(r.standard_normal((b, t, kv, dh)) * 0.5)
+    pos = np.tile(np.arange(t, dtype=np.int32), (b, 1))
+    pos[0, :5] += t                 # row 0: ring wrapped at slots 0..4
+    pos[1, 41:] = -1                # row 1: cache only 41/128 full
+    q_pos = np.asarray([[t + 5], [41]], np.int32)
+    return (q, k, v, jnp.asarray(q_pos), jnp.asarray(pos)), {}
+
+
 def _wkv_case():
     import jax.numpy as jnp
     r = np.random.default_rng(3)
@@ -99,6 +116,7 @@ CASES: Dict[str, Callable[[], Tuple[tuple, dict]]] = {
     "minibude.fasten": _minibude_case,
     "hartree_fock.twoel": _hf_case,
     "attention.flash": _flash_case,
+    "attention.decode": _decode_case,
     "rwkv6.wkv": _wkv_case,
 }
 
@@ -114,6 +132,7 @@ ORACLE_TOL: Dict[str, Tolerance] = {
     "minibude.fasten": (2e-4, 2e-3),
     "hartree_fock.twoel": (1e-4, 1e-4),
     "attention.flash": (2e-4, 2e-4),
+    "attention.decode": (2e-4, 2e-4),
     "rwkv6.wkv": (3e-4, 3e-4),
 }
 
@@ -126,6 +145,11 @@ BACKEND_TOL: Dict[Tuple[str, str], Tolerance] = {
     ("babelstream.add", "xla_shard"): "bitwise",
     ("babelstream.triad", "xla_shard"): "bitwise",
     ("minibude.fasten", "xla_shard"): "bitwise",
+    # the attention xla backends ARE the serving engine's historical
+    # plain-XLA `attend` path (PR 6): registering them as oracles is the
+    # contract that dispatch's default route stays bitwise-identical
+    ("attention.flash", "xla"): "bitwise",
+    ("attention.decode", "xla"): "bitwise",
 }
 
 #: backend -> backend whose output it must reproduce *bitwise* (the

@@ -63,6 +63,7 @@ __all__ = [
     "params_from_cache",
     "tune",
     "cached_best_params",
+    "cached_entry",
     "default_cache_path",
     "COORD_THRESHOLD",
 ]
@@ -563,15 +564,26 @@ def _default_cache() -> TuningCache:
     return c
 
 
+def cached_entry(kernel: PortableKernel, *args: Any, backend: str,
+                 cache: Optional[TuningCache] = None,
+                 **kwargs: Any) -> Optional[Dict[str, Any]]:
+    """Cache-lookup-only: the raw cache entry (``params``/``seconds``/
+    ``search`` provenance) for this exact problem, or ``None`` on a miss.
+    Never times anything — callers that need to *report* provenance
+    (benchmark rows, dispatch logs) use this; plain param injection goes
+    through :func:`cached_best_params`."""
+    if cache is None:
+        cache = _default_cache()
+    return cache.get(make_key(kernel, *args, backend=backend, **kwargs))
+
+
 def cached_best_params(kernel: PortableKernel, *args: Any, backend: str,
                        cache: Optional[TuningCache] = None,
                        **kwargs: Any) -> Dict[str, Any]:
     """Cache-lookup-only path used by ``PortableKernel.__call__(tuned=True)``:
     returns the recorded best params for this exact problem, or ``{}``
     (declared defaults) on a miss.  Never times anything."""
-    if cache is None:
-        cache = _default_cache()
-    hit = cache.get(make_key(kernel, *args, backend=backend, **kwargs))
+    hit = cached_entry(kernel, *args, backend=backend, cache=cache, **kwargs)
     return params_from_cache(hit["params"]) if hit else {}
 
 

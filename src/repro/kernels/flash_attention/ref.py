@@ -1,18 +1,28 @@
-"""Oracle for the flash-attention kernel: exact masked GQA attention.
+"""Oracles for the flash/decode attention kernels: exact masked GQA.
 
-Layout convention for the kernel path: q (B, H, S, Dh), k/v (B, Kv, T, Dh)
-with index-aligned positions (token i at position i) — the train/prefill
-case the kernel serves.
+Both wrap the plain-XLA ``models/attention.attend_xla`` path — the serving
+engine's historical attention implementation — so registry conformance pins
+the Pallas kernels to exactly what serving used to run.
+
+Layout conventions:
+  * ``flash_ref`` (prefill/train): q (B, H, S, Dh), k/v (B, Kv, T, Dh).
+    Positions default to index-aligned (token i at position i); passing
+    ``q_pos``/``k_pos`` (B, S)/(B, T) switches to explicit positions with
+    -1 = empty/pad (left-padded serving prefill).
+  * ``decode_ref`` (serving decode): model-native layout — q (B, 1, H, Dh),
+    k/v (B, T, Kv, Dh) ring-buffer cache, q_pos (B, 1) / k_pos (B, T).
+    This is *bitwise* the ``attend`` decode path.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.models.attention import attend
+from repro.models.attention import attend_xla
 
 
-def flash_ref(q, k, v, *, causal: bool = True, window: int = 0):
+def flash_ref(q, k, v, q_pos=None, k_pos=None, *, causal: bool = True,
+              window: int = 0):
     """q (B,H,S,Dh), k/v (B,Kv,T,Dh) -> (B,H,S,Dh)."""
     b, h, s, dh = q.shape
     kv = k.shape[1]
@@ -20,8 +30,18 @@ def flash_ref(q, k, v, *, causal: bool = True, window: int = 0):
     q_bshd = jnp.moveaxis(q, 1, 2)            # (B,S,H,Dh)
     k_bshd = jnp.moveaxis(k, 1, 2)
     v_bshd = jnp.moveaxis(v, 1, 2)
-    pos_q = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-    pos_k = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
-    out = attend(q_bshd, k_bshd, v_bshd, pos_q, pos_k, n_kv_heads=kv,
-                 causal=causal, window=window)
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    if k_pos is None:
+        k_pos = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                                 (b, t))
+    out = attend_xla(q_bshd, k_bshd, v_bshd, q_pos, k_pos, n_kv_heads=kv,
+                     causal=causal, window=window)
     return jnp.moveaxis(out, 2, 1)
+
+
+def decode_ref(q, k, v, q_pos, k_pos, *, window: int = 0):
+    """q (B,1,H,Dh), k/v (B,T,Kv,Dh), q_pos (B,1), k_pos (B,T) -> like q."""
+    return attend_xla(q, k, v, q_pos, k_pos, n_kv_heads=k.shape[2],
+                      causal=True, window=window)

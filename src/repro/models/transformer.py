@@ -156,7 +156,8 @@ def layer_apply(p: Params, x, cfg: ModelConfig, kind: Dict[str, Any], *,
                        head_dim=cfg.head_dim, positions=positions,
                        use_rope=cfg.use_rope, rope_theta=cfg.rope_theta,
                        causal=not encoder, window=kind["window"],
-                       bf16_intermediates=cfg.attn_bf16_intermediates)
+                       bf16_intermediates=cfg.attn_bf16_intermediates,
+                       backend=cfg.attn_backend)
     a_out, new_kv = attn.attention_apply(p["attn"], h,
                                          cache=cache.get("self"),
                                          **attn_kwargs)
@@ -184,7 +185,8 @@ def layer_apply(p: Params, x, cfg: ModelConfig, kind: Dict[str, Any], *,
         c_out, _ = attn.attention_apply(
             p["cross"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.head_dim, positions=positions, causal=False,
-            use_rope=False, memory_kv=(mk, mv), memory_pos=memory_pos)
+            use_rope=False, memory_kv=(mk, mv), memory_pos=memory_pos,
+            backend=cfg.attn_backend)
         x = hints.activation(x + c_out)
 
     h = apply_norm(p["ln2"], x, cfg.norm, bf16_mul=cfg.norm_bf16_mul)
@@ -359,7 +361,8 @@ def encode(params: Params, cfg: ModelConfig, frames: jnp.ndarray,
 def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             positions=None, caches=None, frames=None, patches=None,
             memory=None, hints: ShardingHints = NO_HINTS,
-            remat: bool = False, last_only: bool = False, lengths=None):
+            remat: bool = False, last_only: bool = False, lengths=None,
+            attn_backend: Optional[str] = None):
     """Full forward. tokens (B, S) -> logits (B, S, V), caches', aux.
 
     frames: (B, T, D) stub audio frontend output (enc-dec archs).
@@ -371,7 +374,11 @@ def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     lengths: (B,) true prompt lengths for left-padded batched prefill; pads
     are masked out of attention via position -1 (see leftpad_positions).
     Ignored when explicit positions are given.
+    attn_backend: per-call override of cfg.attn_backend (registry attention
+    backend; see models/attention.resolve_attention_backend).
     """
+    if attn_backend is not None:
+        cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
     cdt = cfg.cdtype()
     b, s = tokens.shape
     if positions is None:

@@ -29,6 +29,7 @@ so MoE outputs can differ from unbatched decode.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -37,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models.attention import resolve_attention_backend
 from repro.models.transformer import forward, init_caches
 from repro.training.serve_step import decode_step, sample, sample_per_slot
 from repro.serving.request import Request, RequestQueue
@@ -63,15 +65,23 @@ def scatter_slot_cache(big, small, slot):
 class ServingEngine:
     def __init__(self, params, cfg: ModelConfig, *, num_slots: int = 4,
                  cache_len: int = 128, prefill_len: int = 32,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 attn_backend: Optional[str] = None):
         if cfg.rwkv or cfg.ssm_state or cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "slot engine supports decoder-only attention archs; "
                 f"{cfg.name} carries per-request recurrent/encoder state")
         if prefill_len > cache_len:
             raise ValueError("prefill_len must fit in cache_len")
+        if attn_backend is not None:
+            cfg = dataclasses.replace(cfg, attn_backend=attn_backend)
         self.params = params
         self.cfg = cfg
+        # what the two compiled programs will actually dispatch to (env var /
+        # availability fallback applied) — benchmark rows report this
+        self.attn_backends = {
+            kind: resolve_attention_backend(kind, cfg.attn_backend)
+            for kind in ("prefill", "decode")}
         self.num_slots = num_slots
         self.cache_len = cache_len
         self.prefill_len = prefill_len

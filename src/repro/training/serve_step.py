@@ -14,7 +14,7 @@ from repro.models.transformer import (NO_HINTS, ShardingHints, encode,
 
 def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
             cache_len: int, lengths=None, frames=None, patches=None,
-            hints: ShardingHints = NO_HINTS):
+            hints: ShardingHints = NO_HINTS, attn_backend=None):
     """Process the prompt, fill caches. Returns (last_logits, caches, memory).
 
     lengths: (B,) true prompt lengths for a LEFT-padded mixed batch.  Without
@@ -23,6 +23,7 @@ def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
     out of attention and the KV cache, and the returned last-position logits
     are each row's true final-token logits (left-padding puts the final token
     at index -1).  Subsequent decode positions must start at `lengths[b]`.
+    attn_backend: registry attention backend override (see models/attention).
     """
     b, s = tokens.shape
     caches = init_caches(cfg, b, cache_len)
@@ -31,16 +32,18 @@ def prefill(params, cfg: ModelConfig, tokens: jnp.ndarray, *,
         memory, _ = encode(params, cfg, frames, hints)
     logits, caches, _ = forward(params, cfg, tokens, caches=caches,
                                 patches=patches, memory=memory, hints=hints,
-                                last_only=True, lengths=lengths)
+                                last_only=True, lengths=lengths,
+                                attn_backend=attn_backend)
     return logits[:, -1], caches, memory
 
 
 def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
                 positions: jnp.ndarray, caches, *, memory=None,
-                hints: ShardingHints = NO_HINTS):
+                hints: ShardingHints = NO_HINTS, attn_backend=None):
     """One token for every sequence. tokens/positions (B, 1)."""
     logits, caches, _ = forward(params, cfg, tokens, positions=positions,
-                                caches=caches, memory=memory, hints=hints)
+                                caches=caches, memory=memory, hints=hints,
+                                attn_backend=attn_backend)
     return logits[:, -1], caches
 
 
@@ -74,14 +77,14 @@ def sample_per_slot(logits: jnp.ndarray, keys: jnp.ndarray,
 def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, *,
              max_new_tokens: int, cache_len: int, key=None,
              temperature: float = 0.0, frames=None, patches=None,
-             hints: ShardingHints = NO_HINTS) -> jnp.ndarray:
+             hints: ShardingHints = NO_HINTS, attn_backend=None) -> jnp.ndarray:
     """Greedy/temperature generation loop (host-driven, jit per step)."""
     if key is None:
         key = jax.random.PRNGKey(0)
     b, s = prompt.shape
     last, caches, memory = prefill(params, cfg, prompt, cache_len=cache_len,
                                    frames=frames, patches=patches,
-                                   hints=hints)
+                                   hints=hints, attn_backend=attn_backend)
     out = []
     tok = sample(last, key, temperature)
     out.append(tok)
@@ -89,7 +92,8 @@ def generate(params, cfg: ModelConfig, prompt: jnp.ndarray, *,
         key, sub = jax.random.split(key)
         pos = jnp.full((b, 1), s + i - 1, jnp.int32)
         logits, caches = decode_step(params, cfg, tok[:, None], pos, caches,
-                                     memory=memory, hints=hints)
+                                     memory=memory, hints=hints,
+                                     attn_backend=attn_backend)
         tok = sample(logits, sub, temperature)
         out.append(tok)
     return jnp.stack(out, axis=1)
