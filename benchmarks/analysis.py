@@ -1,0 +1,64 @@
+"""Static-auditor lane for the benchmark orchestrator (BENCH_analysis.json).
+
+Not a timing benchmark: this module runs ``python -m repro.core.analysis``
+— the registry-wide static kernel auditor — as a child process (the CLI
+re-execs itself under forced host devices for the sharded cells, exactly
+like ``benchmarks/scaling.py``) and republishes its ``repro.analysis/v1``
+report as the orchestrator artifact.  The CSV row carries the audit
+wall-clock and the finding/waiver/skip counts as the derived column, so a
+drift in either shows up in the same place every other lane drifts.
+
+    PYTHONPATH=src python -m benchmarks.run [--smoke] --only analysis
+
+A non-waived finding fails the module (nonzero orchestrator exit), the
+same contract as a conformance failure: the registry must stay audit-clean.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.common import emit, header
+
+ARTIFACT = "BENCH_analysis.json"
+
+
+def run(smoke: bool = False, json_path: str = ARTIFACT) -> dict:
+    cmd = [sys.executable, "-m", "repro.core.analysis",
+           "--json", os.path.abspath(json_path)]
+    if smoke:
+        cmd.append("--smoke")
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    t0 = time.perf_counter()
+    proc = subprocess.run(cmd, env=env, capture_output=True, text=True)
+    dt = time.perf_counter() - t0
+    sys.stderr.write(proc.stderr)
+
+    if not os.path.exists(json_path):
+        raise RuntimeError(
+            f"auditor wrote no report (exit {proc.returncode}):\n"
+            f"{proc.stdout}")
+    with open(json_path) as f:
+        report = json.load(f)
+    s = report["summary"]
+    emit("analysis.audit", dt,
+         f"cells={s['cells']} findings={s['findings']} "
+         f"waived={s['waived']} skips={s['skips']}")
+    if proc.returncode or s["findings"]:
+        raise RuntimeError(
+            f"static audit found {s['findings']} non-waived finding(s) "
+            f"(exit {proc.returncode}):\n{proc.stdout}")
+    return report
+
+
+if __name__ == "__main__":
+    header()
+    run(smoke="--smoke" in sys.argv[1:])

@@ -16,6 +16,9 @@ Emits ``name,us_per_call,derived`` CSV (scaffold contract).  Mapping:
     lm_step          -> framework-level LM step timings
     serving          -> continuous-batching engine tok/s + p50/p95 latency
                         under a Poisson-ish synthetic arrival trace
+    analysis         -> registry-wide static kernel auditor (jaxpr/grid/
+                        collective/recompile passes; writes
+                        BENCH_analysis.json, fails on non-waived findings)
 
 ``--smoke`` shrinks every module that supports it (a ``smoke=`` parameter
 on its ``run()``) to seconds-scale shapes with ``iters=1`` — the PR-time
@@ -37,7 +40,7 @@ from benchmarks.common import header
 
 MODULES = ["stencil", "babelstream", "minibude", "hartree_fock",
            "portability", "scaling", "roofline_kernels", "lm_step",
-           "serving"]
+           "serving", "analysis"]
 
 
 def _run_module(name: str, smoke: bool) -> None:

@@ -1,0 +1,80 @@
+"""Pass 3 — collective-traffic audit against declared contracts.
+
+Every backend either declares what it may ppermute/psum/all_gather
+(``PortableKernel.declare_comm_contract``) or is held to zero collectives.
+The declared contract is normalized to a list of *variants*: call-kwarg
+overrides plus the expected census, so one backend can be audited under
+several decompositions (slab vs pencil, overlap on/off) from one
+declaration.  An expectation may carry:
+
+  * ``"overlap_shape"``: the local interior shape that must be computable
+    without any ``ppermute``-derived operand — the static witness that the
+    halo exchange is issued *before* (and independently of) the interior
+    compute, i.e. overlappable by the scheduler;
+  * ``"all_gather": 0`` is implied when absent — an undeclared all_gather
+    is always a finding (it re-materializes the whole array and silently
+    defeats the decomposition).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+from repro.core.analysis import jaxpr_utils as JU
+from repro.core.analysis.report import Finding
+
+Variant = Tuple[Dict[str, Any], Dict[str, Any]]
+
+
+def normalize_contract(contract: Any, args: tuple) -> List[Variant]:
+    """dict -> one default-call variant; callable -> its variant list.
+    The no-contract expectation deliberately omits the ``all_gather`` key
+    so a traced all_gather reports as ``undeclared-all-gather`` (its own
+    code) rather than a generic count mismatch."""
+    if contract is None:
+        return [({}, {"ppermute": 0, "psum": 0})]
+    if callable(contract):
+        return [(dict(kw), dict(exp)) for kw, exp in contract(*args)]
+    return [({}, dict(contract))]
+
+
+def check_counts(kernel: str, backend: str, closed: Any,
+                 expected: Dict[str, Any],
+                 declared: bool, variant: str = "") -> List[Finding]:
+    """Compare the traced collective census to one variant's expectation."""
+    findings: List[Finding] = []
+    counts = JU.count_collectives(closed.jaxpr)
+    tag = f" [{variant}]" if variant else ""
+    for kind in JU.COLLECTIVE_KINDS:
+        want = int(expected.get(kind, 0))
+        got = counts[kind]
+        if got == want:
+            continue
+        undeclared_gather = kind == "all_gather" and kind not in expected
+        code = ("undeclared-all-gather" if undeclared_gather
+                else "undeclared-collective" if not declared
+                else "comm-contract-mismatch")
+        findings.append(Finding(
+            kernel=kernel, backend=backend, pass_name="collectives",
+            code=code,
+            message=(f"{kind} count{tag}: traced {got}, contract says "
+                     f"{want}"
+                     + ("" if declared else
+                        " (backend declares no communication contract)")),
+            detail={"kind": kind, "traced": got, "declared": want,
+                    "variant": variant}))
+
+    shape = expected.get("overlap_shape")
+    if shape is not None:
+        ok = any(JU.independent_compute_exists(body, tuple(shape))
+                 for body in JU.find_shard_map_bodies(closed.jaxpr))
+        if not ok:
+            findings.append(Finding(
+                kernel=kernel, backend=backend, pass_name="collectives",
+                code="overlap-not-independent",
+                message=(f"overlap contract{tag}: no interior compute of "
+                         f"shape {tuple(shape)} is independent of the "
+                         f"ppermute halo traffic — halo exchange and "
+                         f"compute cannot overlap"),
+                detail={"shape": list(shape), "variant": variant}))
+    return findings

@@ -1,0 +1,104 @@
+"""Finding / skip records and the ``repro.analysis/v1`` report assembly."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+SCHEMA = "repro.analysis/v1"
+
+#: the four static passes, in report order
+PASSES = ("dtypes", "grid", "collectives", "recompile")
+
+SEVERITIES = ("error", "warning")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One defect the auditor can prove from the trace (or source) alone."""
+
+    kernel: str
+    backend: str
+    pass_name: str          # one of PASSES
+    code: str               # stable slug, e.g. "f64-promotion", "write-race"
+    message: str
+    severity: str = "error"
+    waived: bool = False
+    waive_reason: Optional[str] = None
+    detail: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class SkipRecord:
+    """A (cell, pass) the auditor could not run here, and why."""
+
+    kernel: str
+    backend: str
+    pass_name: str
+    reason: str
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CellResult:
+    """Audit outcome of one (kernel, backend) registry cell."""
+
+    kernel: str
+    backend: str
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    skips: List[SkipRecord] = dataclasses.field(default_factory=list)
+    passes_run: Tuple[str, ...] = ()
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if not f.waived]
+
+    @property
+    def waived(self) -> List[Finding]:
+        return [f for f in self.findings if f.waived]
+
+
+def _dedup_source_level(findings: List[Finding]) -> List[Finding]:
+    """Pass-4 findings are per source location, not per cell: many registry
+    cells share a defining module, so the report keeps one entry per
+    (code, module, line) while per-cell results keep them all."""
+    out, seen = [], set()
+    for f in findings:
+        if f.pass_name != "recompile":
+            out.append(f)
+            continue
+        key = (f.code, f.detail.get("module"), f.detail.get("line"))
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out
+
+
+def assemble_report(cells: List[CellResult], *, device_count: int,
+                    smoke: bool) -> Dict[str, Any]:
+    """The ``repro.analysis/v1`` JSON document."""
+    findings = _dedup_source_level([f for c in cells for f in c.errors])
+    waived = _dedup_source_level([f for c in cells for f in c.waived])
+    skips = [s for c in cells for s in c.skips]
+    return {
+        "schema": SCHEMA,
+        "smoke": bool(smoke),
+        "device_count": int(device_count),
+        "passes": list(PASSES),
+        "matrix": [[c.kernel, c.backend] for c in cells],
+        "findings": [f.to_json() for f in findings],
+        "waived": [f.to_json() for f in waived],
+        "skips": [s.to_json() for s in skips],
+        "summary": {
+            "cells": len(cells),
+            "audited": sum(1 for c in cells if c.passes_run),
+            "findings": len(findings),
+            "waived": len(waived),
+            "skips": len(skips),
+        },
+    }

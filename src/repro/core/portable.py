@@ -67,12 +67,26 @@ class Backend:
     # True when this backend is expected to run on the *current* process
     # (pallas-TPU kernels only run on TPU; interpret/xla run anywhere).
     available: Callable[[], bool] = lambda: True
+    # why the last is_available() said False — conformance skips and the
+    # static-auditor report surface it instead of a bare False
+    unavailable_reason: Optional[str] = dataclasses.field(
+        default=None, compare=False)
 
     def is_available(self) -> bool:
         try:
-            return bool(self.available())
-        except Exception:
+            ok = bool(self.available())
+        except Exception as exc:
+            object.__setattr__(
+                self, "unavailable_reason",
+                f"availability probe raised {type(exc).__name__}: {exc}")
             return False
+        reason = None
+        if not ok:
+            pred = getattr(self.available, "__qualname__",
+                           repr(self.available))
+            reason = f"availability predicate {pred} returned False"
+        object.__setattr__(self, "unavailable_reason", reason)
+        return ok
 
     def __call__(self, *args: Any, **kwargs: Any) -> Any:
         return self.fn(*args, **kwargs)
@@ -121,6 +135,15 @@ class PortableKernel:
     bytes_model: Optional[Callable[..., float]] = None
     doc: str = ""
     tunables: Dict[str, TunableSpace] = dataclasses.field(default_factory=dict)
+    #: dtype every reduction in this kernel must accumulate in (or wider);
+    #: the static auditor flags psum/dot_general eqns reducing narrower
+    accum_dtype: str = "float32"
+    #: backend name -> declared communication contract (see
+    #: ``declare_comm_contract``); audited against the traced jaxpr
+    comm_contracts: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: backend name -> grid-coverage metadata (see ``declare_grid_contract``)
+    grid_contracts: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
 
     # ---- registration -------------------------------------------------
     def add_backend(self, name: str, fn: Callable[..., Any],
@@ -146,6 +169,45 @@ class PortableKernel:
 
     def tunable_space(self, backend: str) -> Optional[TunableSpace]:
         return self.tunables.get(backend)
+
+    def declare_comm_contract(self, backends: Union[str, Sequence[str]],
+                              contract: Any) -> None:
+        """Declare the collective traffic one (sharded) backend may emit.
+
+        ``contract`` is either a dict
+        ``{"ppermute": n, "psum": n, "all_gather": n}`` (one traced variant,
+        default call parameters), or a callable ``contract(*case_args)``
+        returning a list of ``(variant_kwargs, expectation_dict)`` pairs —
+        the auditor traces the backend once per variant.  An expectation may
+        also carry ``"overlap_shape": tuple``: the variant must contain an
+        interior compute of that shape with no data dependency on any
+        ``ppermute`` output (the halo/compute-overlap contract).  Backends
+        with no declared contract are audited against *zero* collectives.
+        """
+        names = [backends] if isinstance(backends, str) else list(backends)
+        for n in names:
+            self.comm_contracts[n] = contract
+
+    def comm_contract(self, backend: str) -> Any:
+        return self.comm_contracts.get(backend)
+
+    def declare_grid_contract(self, backends: Union[str, Sequence[str]], *,
+                              accumulator_outputs: Sequence[int] = ()) -> None:
+        """Declare Pallas grid-coverage metadata for one or more backends.
+
+        ``accumulator_outputs`` lists output indices whose block is *meant*
+        to be revisited across grid steps (sequential accumulators like the
+        BabelStream dot partial or flash attention's online-softmax output).
+        Any other revisited output block is a write race; unvisited blocks
+        are holes — both are auditor findings.
+        """
+        names = [backends] if isinstance(backends, str) else list(backends)
+        for n in names:
+            self.grid_contracts[n] = {
+                "accumulator_outputs": tuple(accumulator_outputs)}
+
+    def grid_contract(self, backend: str) -> Dict[str, Any]:
+        return self.grid_contracts.get(backend, {})
 
     def backend(self, name: Optional[str] = None) -> Backend:
         if name is None:
@@ -189,7 +251,8 @@ class PortableKernel:
         if not b.is_available():
             raise BackendUnavailableError(
                 f"kernel {self.name!r} backend {name!r} is not available on "
-                f"this host (available: {self.available_backends()})")
+                f"this host: {b.unavailable_reason} "
+                f"(available: {self.available_backends()})")
         return b
 
     def __call__(self, *args: Any, backend: Optional[str] = None,
@@ -212,13 +275,27 @@ class PortableKernel:
         return self.backend(name)(*args, **kwargs)
 
     # ---- validation ----------------------------------------------------
-    def validate(self, *args: Any, backend: str, rtol: float = 1e-5,
-                 atol: float = 1e-5, **kwargs: Any) -> None:
+    def validate(self, *args: Any, backend: str,
+                 rtol: Optional[float] = None, atol: Optional[float] = None,
+                 **kwargs: Any) -> None:
         """assert_allclose the given backend against the oracle.
+
+        Default tolerances come from the conformance tables
+        (``repro.core.conformance.oracle_tolerance``), so ad-hoc validation
+        and the conformance matrix cannot disagree: a ``"bitwise"`` cell
+        validates at rtol=atol=0, an unregistered kernel falls back to
+        (1e-5, 1e-5).  Explicit ``rtol``/``atol`` override per call.
 
         Raises ``BackendUnavailableError`` (not an opaque crash from inside
         the kernel) when either side cannot run here.
         """
+        if rtol is None or atol is None:
+            from repro.core import conformance
+            tol = conformance.oracle_tolerance(self.name, backend)
+            d_rtol, d_atol = ((0.0, 0.0) if tol == "bitwise"
+                              else tol if tol is not None else (1e-5, 1e-5))
+            rtol = d_rtol if rtol is None else rtol
+            atol = d_atol if atol is None else atol
         want = self._require_available(self.oracle)(*args, **kwargs)
         got = self._require_available(backend)(*args, **kwargs)
         jax.tree.map(

@@ -69,6 +69,7 @@ __all__ = [
     "stream_shard_fns",
     "fasten_shard",
     "fock_shard",
+    "stencil_comm_contract",
     "register_sharded_backends",
 ]
 
@@ -341,6 +342,9 @@ def _pencil_local(u, sz, sy, coeffs, overlap):
 
 @functools.lru_cache(maxsize=None)
 def _stencil_sharded(sz, sy, overlap, invhx2, invhy2, invhz2, invhxyz2):
+    # audit: compile-time-constant(invhx2, invhy2, invhz2, invhxyz2) —
+    # grid-spacing coefficients are fixed for a given problem and baking
+    # them matches the single-device backends' static_argnames contract
     coeffs = (invhx2, invhy2, invhz2, invhxyz2)
     if sy == 1:
         mesh, spec = shard_mesh(sz), P(AXIS)
@@ -519,6 +523,38 @@ def fock_shard(positions, density, *, ngauss: int = 3,
 # --------------------------------------------------------------------------
 # registration: plug into the existing PortableKernel registry
 # --------------------------------------------------------------------------
+#: collective traffic of the 1-D sharded families (static-auditor contract)
+NO_COLLECTIVES = {"ppermute": 0, "psum": 0, "all_gather": 0}
+ONE_PSUM = {"ppermute": 0, "psum": 1, "all_gather": 0}
+
+
+def stencil_comm_contract(u, *args):
+    """Audited variants of the sharded stencil: a slab step exchanges two
+    halos (one ppermute each way), a pencil step four (two axes); the
+    overlap variants pin a shard grid leaving >= 2 local planes (the
+    one-plane-per-shard edge legitimately falls back to plain exchange)
+    and additionally require an interior compute of the full local-block
+    shape with no data dependency on the halo ppermutes."""
+    nz, ny, nx = u.shape
+    variants = [
+        ({"decomp": "slab"}, {**NO_COLLECTIVES, "ppermute": 2}),
+        ({"decomp": "pencil"}, {**NO_COLLECTIVES, "ppermute": 4}),
+    ]
+    for sz in (4, 2):
+        if nz % sz == 0 and nz // sz >= 2:
+            variants.append((
+                {"decomp": "slab", "shard_grid": (sz, 1), "overlap": True},
+                {**NO_COLLECTIVES, "ppermute": 2,
+                 "overlap_shape": (nz // sz, ny, nx)}))
+            break
+    if nz % 2 == 0 and ny % 2 == 0 and nz // 2 >= 2 and ny // 2 >= 2:
+        variants.append((
+            {"decomp": "pencil", "shard_grid": (2, 2), "overlap": True},
+            {**NO_COLLECTIVES, "ppermute": 4,
+             "overlap_shape": (nz // 2, ny // 2, nx)}))
+    return variants
+
+
 def register_sharded_backends() -> None:
     """Attach ``xla_shard`` backends + ``num_shards`` tunables to every
     science-kernel family already in the registry.  Idempotent."""
@@ -532,6 +568,7 @@ def register_sharded_backends() -> None:
             shard_grid=STENCIL_SHARD_GRIDS, overlap=OVERLAP_GRID,
             constraint=lambda p, u, *a, device_count=None, **kw:
                 _stencil_point_ok(p, u.shape[0], u.shape[1], device_count))
+        k.declare_comm_contract(SHARD_BACKEND, stencil_comm_contract)
 
     for op, fn in stream_shard_fns().items():
         k = get_kernel(f"babelstream.{op}")
@@ -542,6 +579,10 @@ def register_sharded_backends() -> None:
             SHARD_BACKEND, num_shards=SHARD_GRID,
             constraint=lambda p, *arrays, device_count=None, **kw:
                 _shard_ok(p["num_shards"], arrays[0].shape[0], device_count))
+        # dot combines per-block partials with one psum; the elementwise
+        # ops are embarrassingly parallel
+        k.declare_comm_contract(
+            SHARD_BACKEND, ONE_PSUM if op == "dot" else NO_COLLECTIVES)
 
     k = get_kernel("minibude.fasten")
     if SHARD_BACKEND not in k.backends:
@@ -550,6 +591,7 @@ def register_sharded_backends() -> None:
             SHARD_BACKEND, num_shards=SHARD_GRID,
             constraint=lambda p, *deck, device_count=None, **kw:
                 _shard_ok(p["num_shards"], deck[4].shape[1], device_count))
+        k.declare_comm_contract(SHARD_BACKEND, NO_COLLECTIVES)
 
     k = get_kernel("hartree_fock.twoel")
     if SHARD_BACKEND not in k.backends:
@@ -558,6 +600,8 @@ def register_sharded_backends() -> None:
             SHARD_BACKEND, num_shards=SHARD_GRID,
             constraint=lambda p, positions, *a, device_count=None, **kw:
                 _shard_ok(p["num_shards"], positions.shape[0], device_count))
+        # per-device Fock partials accumulate with exactly one psum
+        k.declare_comm_contract(SHARD_BACKEND, ONE_PSUM)
 
 
 # importing the ops modules (not the package, to stay cycle-safe when

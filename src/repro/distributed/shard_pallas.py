@@ -57,12 +57,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.portable import get_kernel, on_tpu
 from repro.distributed import collectives
-from repro.distributed.domain import (AXIS, AXIS_Y, AXIS_Z, SHARD_GRID,
-                                      STENCIL_DECOMPS, STENCIL_SHARD_GRIDS,
-                                      _boundary_keep, _shard_ok,
-                                      _stencil_point_ok, multi_device,
-                                      resolve_num_shards, resolve_shard_grid,
-                                      shard_mesh, shard_mesh2d)
+from repro.distributed.domain import (AXIS, AXIS_Y, AXIS_Z, NO_COLLECTIVES,
+                                      ONE_PSUM, SHARD_GRID, STENCIL_DECOMPS,
+                                      STENCIL_SHARD_GRIDS, _boundary_keep,
+                                      _shard_ok, _stencil_point_ok,
+                                      multi_device, resolve_num_shards,
+                                      resolve_shard_grid, shard_mesh,
+                                      shard_mesh2d)
 from repro.kernels.babelstream import kernel as stream_K
 from repro.kernels.babelstream import ref as stream_ref
 from repro.kernels.hartree_fock import kernel as hf_K
@@ -78,6 +79,7 @@ __all__ = [
     "stream_shard_pallas_fns",
     "fasten_shard_pallas",
     "fock_shard_pallas",
+    "stencil_pallas_comm_contract",
     "stencil_pallas_point_ok",
     "stream_pallas_point_ok",
     "bude_pallas_point_ok",
@@ -160,6 +162,9 @@ def _pencil_local_pallas(u, sz, sy, coeffs, by, interpret):
 @functools.lru_cache(maxsize=None)
 def _stencil_shard_pallas(sz, sy, by, interpret, invhx2, invhy2, invhz2,
                           invhxyz2):
+    # audit: compile-time-constant(invhx2, invhy2, invhz2, invhxyz2) —
+    # grid-spacing coefficients are fixed per problem; baking them mirrors
+    # the single-device pallas backends' static_argnames contract
     coeffs = (invhx2, invhy2, invhz2, invhxyz2)
     if sy == 1:
         mesh, spec = shard_mesh(sz), P(AXIS)
@@ -200,9 +205,10 @@ def laplacian_shard_pallas(u, invhx2=1.0, invhy2=1.0, invhz2=1.0,
 # --------------------------------------------------------------------------
 @functools.lru_cache(maxsize=None)
 def _stream_shard_pallas(op, num_shards, block_rows, interpret, scalar):
-    # the scalar IS part of this cache key: the Pallas stream kernels bake
-    # it as a compile-time constant (the Mojo `alias` analogue), exactly
-    # like the single-device pallas backends — one program per value
+    # audit: compile-time-constant(scalar) — the scalar IS part of this
+    # cache key: the Pallas stream kernels bake it as a compile-time
+    # constant (the Mojo `alias` analogue), exactly like the single-device
+    # pallas backends — one program per value
     mesh = shard_mesh(num_shards)
     fn2d, nargs, takes_scalar = stream_K.stream_2d_fns()[op]
 
@@ -392,6 +398,18 @@ def hf_pallas_point_ok(p, natoms: int,
 # --------------------------------------------------------------------------
 # registration: plug into the existing PortableKernel registry
 # --------------------------------------------------------------------------
+def stencil_pallas_comm_contract(u, *args):
+    """Declared collective census for the shard_pallas stencil: the halo
+    exchange is identical to the xla_shard composition (slab: 2 ppermutes,
+    pencil: 4) — what changes is only the interior compute, which lowers to
+    a pallas_call instead of fused XLA ops.  No overlap variants: the
+    Pallas composition has no overlap knob."""
+    return [
+        ({"decomp": "slab"}, {**NO_COLLECTIVES, "ppermute": 2}),
+        ({"decomp": "pencil"}, {**NO_COLLECTIVES, "ppermute": 4}),
+    ]
+
+
 def register_shard_pallas_backends() -> None:
     """Attach ``shard_pallas`` backends + composite tile x shard tunables
     to every science family whose Pallas kernel shards.  Idempotent."""
@@ -405,6 +423,8 @@ def register_shard_pallas_backends() -> None:
             constraint=lambda p, u, *a, device_count=None, **kw:
                 stencil_pallas_point_ok(p, u.shape[0], u.shape[1],
                                         device_count))
+        k.declare_comm_contract(PALLAS_SHARD_BACKEND,
+                                stencil_pallas_comm_contract)
 
     for op, fn in stream_shard_pallas_fns().items():
         k = get_kernel(f"babelstream.{op}")
@@ -417,6 +437,15 @@ def register_shard_pallas_backends() -> None:
             block_rows=stream_K.BLOCK_ROWS_GRID,
             constraint=lambda p, *arrays, device_count=None, **kw:
                 stream_pallas_point_ok(p, arrays[0].shape[0], device_count))
+        k.declare_comm_contract(
+            PALLAS_SHARD_BACKEND,
+            ONE_PSUM if op == "dot" else NO_COLLECTIVES)
+        if op == "dot":
+            # the local Pallas dot reduces sequentially into one output
+            # block revisited every grid step — a declared accumulator, not
+            # a write race
+            k.declare_grid_contract(PALLAS_SHARD_BACKEND,
+                                    accumulator_outputs=(0,))
 
     k = get_kernel("minibude.fasten")
     if PALLAS_SHARD_BACKEND not in k.backends:
@@ -427,6 +456,7 @@ def register_shard_pallas_backends() -> None:
             pose_tile=mb_K.POSE_TILE_GRID,
             constraint=lambda p, *deck, device_count=None, **kw:
                 bude_pallas_point_ok(p, deck[4].shape[1], device_count))
+        k.declare_comm_contract(PALLAS_SHARD_BACKEND, NO_COLLECTIVES)
 
     k = get_kernel("hartree_fock.twoel")
     if PALLAS_SHARD_BACKEND not in k.backends:
@@ -437,6 +467,7 @@ def register_shard_pallas_backends() -> None:
             i_tile=hf_K.I_TILE_GRID,
             constraint=lambda p, positions, *a, device_count=None, **kw:
                 hf_pallas_point_ok(p, positions.shape[0], device_count))
+        k.declare_comm_contract(PALLAS_SHARD_BACKEND, ONE_PSUM)
 
 
 # importing the ops modules registers the base kernels (mirrors domain.py);

@@ -97,3 +97,8 @@ for _op in ("copy", "mul", "add", "triad", "dot"):
     _k.declare_tunables(("pallas", "pallas_interpret"),
                         block_rows=K.BLOCK_ROWS_GRID,
                         constraint=_block_rows_ok)
+    if _op == "dot":
+        # dot reduces every grid step into the same (1, 1) output block —
+        # a declared sequential accumulator, not a write race
+        _k.declare_grid_contract(("pallas", "pallas_interpret"),
+                                 accumulator_outputs=(0,))

@@ -106,6 +106,10 @@ _k.declare_tunables(
     bk=(64, 128, 256, 512),
     constraint=lambda p, q, k, v, *a, **kw:
         q.shape[2] % p["bq"] == 0 and k.shape[2] % p["bk"] == 0)
+# the online-softmax output block is revisited across the k-axis grid —
+# a declared rescale-and-accumulate output, not a write race
+_k.declare_grid_contract(("pallas", "pallas_interpret"),
+                         accumulator_outputs=(0,))
 
 
 _kd = register_kernel("attention.decode", flops_model=_decode_flops_model,
@@ -122,3 +126,6 @@ _kd.declare_tunables(
     bkv=(64, 128, 256, 512),
     constraint=lambda p, q, k, v, *a, **kw:
         k.shape[1] % p["bkv"] == 0 or k.shape[1] <= p["bkv"])
+# same online-softmax accumulator shape along the cache-axis grid
+_kd.declare_grid_contract(("pallas", "pallas_interpret"),
+                          accumulator_outputs=(0,))

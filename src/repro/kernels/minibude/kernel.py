@@ -56,6 +56,13 @@ def local_pose_tile(nposes_local: int, pose_tile: Optional[int] = None) -> int:
 def _fasten_body(ppos_ref, ppar_ref, lpos_ref, lpar_ref, poses_ref, o_ref,
                  *, natlig: int):
     dt = o_ref.dtype
+    # jnp.where over two weak Python scalars promotes to float64 under x64
+    # mode; anchor the branch constants to the output dtype (same fix as
+    # the jnp oracle — the bitwise twin contract needs both or neither)
+    c = dt.type
+    FOUR_, TWO_, QUARTER_, HALF_ = c(FOUR), c(TWO), c(QUARTER), c(HALF)
+    ONE_, ZERO_, HARD2_ = c(ONE), c(ZERO), c(TWO * HARDNESS)
+    NPNPDIST_, NPPDIST_, NFMAX_ = c(NPNPDIST), c(NPPDIST), c(-FLOAT_MAX)
     # pose transform for this 128-pose tile: twelve (1, T) rows
     ang = poses_ref[...]                       # (6, T)
     sx, cx = jnp.sin(ang[0:1]), jnp.cos(ang[0:1])
@@ -96,15 +103,15 @@ def _fasten_body(ppos_ref, ppar_ref, lpos_ref, lpar_ref, poses_ref, o_ref,
         radij = p_radius + l_radius            # (natpro, 1)
         r_radij = ONE / radij
         both_f = (p_hbtype == HBTYPE_F) & (l_hbtype == HBTYPE_F)
-        elcdst = jnp.where(both_f, FOUR, TWO)
-        elcdst1 = jnp.where(both_f, QUARTER, HALF)
+        elcdst = jnp.where(both_f, FOUR_, TWO_)
+        elcdst1 = jnp.where(both_f, QUARTER_, HALF_)
         type_e = (p_hbtype == HBTYPE_E) | (l_hbtype == HBTYPE_E)
 
-        p_hphb_s = p_hphb * jnp.where(phphb_ltz & lhphb_gtz, -ONE, ONE)
-        l_hphb_s = l_hphb * jnp.where(phphb_gtz & lhphb_ltz, -ONE, ONE)
+        p_hphb_s = p_hphb * jnp.where(phphb_ltz & lhphb_gtz, -ONE_, ONE_)
+        l_hphb_s = l_hphb * jnp.where(phphb_gtz & lhphb_ltz, -ONE_, ONE_)
         distdslv = jnp.where(phphb_ltz,
-                             jnp.where(lhphb_ltz, NPNPDIST, NPPDIST),
-                             jnp.where(lhphb_ltz, NPPDIST, -FLOAT_MAX))
+                             jnp.where(lhphb_ltz, NPNPDIST_, NPPDIST_),
+                             jnp.where(lhphb_ltz, NPPDIST_, NFMAX_))
         r_distdslv = ONE / distdslv
         chrg_init = l_elsc * p_elsc
         dslv_init = p_hphb_s + l_hphb_s
@@ -117,16 +124,15 @@ def _fasten_body(ppos_ref, ppar_ref, lpos_ref, lpar_ref, poses_ref, o_ref,
         distbb = distij - radij
         zone1 = distbb < ZERO
 
-        e_steric = (ONE - distij * r_radij) * jnp.where(
-            zone1, TWO * HARDNESS, ZERO)
+        e_steric = (ONE - distij * r_radij) * jnp.where(zone1, HARD2_, ZERO_)
         chrg_e = chrg_init * (jnp.where(zone1, ONE, ONE - distbb * elcdst1)
-                              * jnp.where(distbb < elcdst, ONE, ZERO))
+                              * jnp.where(distbb < elcdst, ONE_, ZERO_))
         chrg_e = jnp.where(type_e, -jnp.abs(chrg_e), chrg_e)
         e_chrg = chrg_e * CNSTNT
 
         coeff = ONE - distbb * r_distdslv
         dslv_e = dslv_init * jnp.where((distbb < distdslv) & phphb_nz,
-                                       ONE, ZERO)
+                                       ONE_, ZERO_)
         dslv_e = dslv_e * jnp.where(zone1, ONE, coeff)
 
         return etot + jnp.sum(e_steric + e_chrg + dslv_e, axis=0,

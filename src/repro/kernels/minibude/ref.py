@@ -45,6 +45,14 @@ def fasten(protein_pos: jnp.ndarray, protein_par: jnp.ndarray,
     P = poses.shape[1]
     m = pose_transforms(poses)                       # (P, 3, 4)
 
+    # jnp.where over two weak Python scalars promotes to float64 under x64
+    # mode; anchoring the branch constants to the input dtype keeps the
+    # oracle precision-faithful on every host configuration
+    c = poses.dtype.type
+    FOUR_, TWO_, QUARTER_, HALF_ = c(FOUR), c(TWO), c(QUARTER), c(HALF)
+    ONE_, ZERO_, HARD2_ = c(ONE), c(ZERO), c(TWO * HARDNESS)
+    NPNPDIST_, NPPDIST_, NFMAX_ = c(NPNPDIST), c(NPPDIST), c(-FLOAT_MAX)
+
     p_hbtype = protein_par[:, 0][:, None]            # (natpro, 1)
     p_radius = protein_par[:, 1][:, None]
     p_hphb = protein_par[:, 2][:, None]
@@ -66,18 +74,18 @@ def fasten(protein_pos: jnp.ndarray, protein_par: jnp.ndarray,
         radij = p_radius + l_radius                  # (natpro, 1)
         r_radij = ONE / radij
         both_f = (p_hbtype == HBTYPE_F) & (l_hbtype == HBTYPE_F)
-        elcdst = jnp.where(both_f, FOUR, TWO)
-        elcdst1 = jnp.where(both_f, QUARTER, HALF)
+        elcdst = jnp.where(both_f, FOUR_, TWO_)
+        elcdst1 = jnp.where(both_f, QUARTER_, HALF_)
         type_e = (p_hbtype == HBTYPE_E) | (l_hbtype == HBTYPE_E)
 
         phphb_ltz = p_hphb < ZERO
         phphb_gtz = p_hphb > ZERO
         phphb_nz = p_hphb != ZERO
-        p_hphb_s = p_hphb * jnp.where(phphb_ltz & lhphb_gtz, -ONE, ONE)
-        l_hphb_s = l_hphb * jnp.where(phphb_gtz & lhphb_ltz, -ONE, ONE)
+        p_hphb_s = p_hphb * jnp.where(phphb_ltz & lhphb_gtz, -ONE_, ONE_)
+        l_hphb_s = l_hphb * jnp.where(phphb_gtz & lhphb_ltz, -ONE_, ONE_)
         distdslv = jnp.where(phphb_ltz,
-                             jnp.where(lhphb_ltz, NPNPDIST, NPPDIST),
-                             jnp.where(lhphb_ltz, NPPDIST, -FLOAT_MAX))
+                             jnp.where(lhphb_ltz, NPNPDIST_, NPPDIST_),
+                             jnp.where(lhphb_ltz, NPPDIST_, NFMAX_))
         r_distdslv = ONE / distdslv
         chrg_init = l_elsc * p_elsc
         dslv_init = p_hphb_s + l_hphb_s
@@ -88,16 +96,15 @@ def fasten(protein_pos: jnp.ndarray, protein_par: jnp.ndarray,
         distbb = distij - radij
         zone1 = distbb < ZERO
 
-        e_steric = (ONE - distij * r_radij) * jnp.where(zone1,
-                                                        TWO * HARDNESS, ZERO)
+        e_steric = (ONE - distij * r_radij) * jnp.where(zone1, HARD2_, ZERO_)
         chrg_e = chrg_init * (jnp.where(zone1, ONE, ONE - distbb * elcdst1)
-                              * jnp.where(distbb < elcdst, ONE, ZERO))
+                              * jnp.where(distbb < elcdst, ONE_, ZERO_))
         chrg_e = jnp.where(type_e, -jnp.abs(chrg_e), chrg_e)
         e_chrg = chrg_e * CNSTNT
 
         coeff = ONE - distbb * r_distdslv
         dslv_e = dslv_init * jnp.where((distbb < distdslv) & phphb_nz,
-                                       ONE, ZERO)
+                                       ONE_, ZERO_)
         dslv_e = dslv_e * jnp.where(zone1, ONE, coeff)
 
         contrib = jnp.sum(e_steric + e_chrg + dslv_e, axis=0)   # (P,)
