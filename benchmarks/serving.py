@@ -1,4 +1,4 @@
-"""Serving-engine benchmark: throughput + latency, per attention backend.
+"""Serving-engine benchmark: throughput + SLO latency, per attention backend.
 
 Drives the fixed-shape continuous-batching engine with a Poisson-ish
 synthetic arrival trace (repro/serving/trace.py) on a smoke-size model,
@@ -6,8 +6,8 @@ once per attention backend — the plain-XLA oracle first (the before), then
 the Pallas registry path (compiled on TPU, interpret elsewhere — the
 after).  Each backend emits one row:
 
-    serving[<backend>],<us_per_decode_step>,<tok/s + TTFT + latency + attn
-    dispatch provenance>
+    serving[<backend>],<us_per_decode_step>,<tok/s + TTFT/latency/ITL
+    p50/p95/p99 + attn dispatch provenance>
 
 The dispatch provenance comes from ``models/attention.dispatch_log()``,
 captured at trace time while the engine compiles its two programs: which
@@ -15,25 +15,40 @@ registry backend each program actually dispatched to and whether its block
 sizes came from the tuning cache (``exhaustive``/``coordinate``) or the
 declared defaults (``miss-default``).
 
+Since PR 8 the whole run records through ``repro.core.telemetry``: every
+request's lifecycle (enqueue -> slot-assign -> prefill span -> first-token
+-> per-step decode spans -> finish), queue-depth/slot-occupancy gauges,
+attention dispatch events, and — via the ``jax.monitoring`` bridge — an XLA
+compile-event counter per row, the runtime twin of the static auditor's
+``recompile`` pass.  The trace is exported next to the artifact as a JSONL
+event log (``BENCH_serving_trace.jsonl`` — feed it to ``python -m
+repro.core.telemetry summarize``) and a Chrome/Perfetto-loadable
+``BENCH_serving_trace.json``.
+
 A small warmup trace triggers the two compiles (one prefill shape, one
 decode shape) before timing; the measured run must not retrace — the row is
-annotated `RETRACED` if it does, since that invalidates the timing.  A
+annotated `RETRACED` if it does, since that invalidates the timing (the
+``jax_compile_events`` column counts the expected warmup compiles; extra
+compiles during the timed run are the recompile-storm signal).  A
 machine-readable artifact is written to ``BENCH_serving.json`` (schema
-``repro.serving/v2``; v1 was the single pre-PR-6 CSV row with no backend
-dimension).
+``repro.serving/v3``; v2 lacked the p99/inter-token-latency SLO columns,
+the compile counter, and the telemetry block; v1 was the single pre-PR-6
+CSV row).
 """
 
 from __future__ import annotations
 
 import json
 import time
-from typing import Any, Dict
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 
 from benchmarks.common import emit
 from repro.configs import get_config
+from repro.core import telemetry as tel
 from repro.core.portable import on_tpu
+from repro.core.telemetry.jaxmon import COMPILE_COUNTER
 from repro.models import attention as A
 from repro.models import transformer as T
 from repro.serving import ServingEngine, latency_summary, synthetic_trace
@@ -45,7 +60,7 @@ PREFILL_LEN = 16
 RATE_RPS = 50.0
 MAX_NEW = 16
 ARTIFACT = "BENCH_serving.json"
-SCHEMA = "repro.serving/v2"
+SCHEMA = "repro.serving/v3"
 
 
 def _prov(log: Dict[str, Dict[str, Any]], kind: str) -> str:
@@ -57,9 +72,19 @@ def _prov(log: Dict[str, Dict[str, Any]], kind: str) -> str:
     return f"{kind}={bk}" + (f"/{tuning}" if bk != "xla" else "")
 
 
+def _compile_count() -> float:
+    return tel.snapshot().get("counters", {}).get(COMPILE_COUNTER, 0.0)
+
+
+def _ms(lat: Dict[str, float], key: str) -> Optional[float]:
+    v = lat.get(key)
+    return v * 1e3 if v is not None else None
+
+
 def _one_backend(params, cfg, backend: str, n_requests: int
-                 ) -> Dict[str, Any]:
+                 ) -> Tuple[Dict[str, Any], List[Dict[str, Any]]]:
     A.reset_dispatch_log()
+    compiles_before = _compile_count()
     eng = ServingEngine(params, cfg, num_slots=NUM_SLOTS,
                         cache_len=CACHE_LEN, prefill_len=PREFILL_LEN,
                         attn_backend=backend)
@@ -74,6 +99,7 @@ def _one_backend(params, cfg, backend: str, n_requests: int
     traces_before = (eng.stats["prefill_traces"], eng.stats["decode_traces"])
     steps_before = eng.stats["decode_steps"]
     toks_before = eng.stats["tokens_generated"]
+    compiles_warm = _compile_count()
 
     trace = synthetic_trace(n_requests, vocab_size=cfg.vocab_size,
                             rate=RATE_RPS, max_prompt=PREFILL_LEN,
@@ -81,62 +107,125 @@ def _one_backend(params, cfg, backend: str, n_requests: int
     t0 = time.perf_counter()
     done = eng.run(trace)
     wall = time.perf_counter() - t0
+    compiles_after = _compile_count()
 
     steps = eng.stats["decode_steps"] - steps_before
     toks = eng.stats["tokens_generated"] - toks_before
     lat = latency_summary(done)
     retraced = (eng.stats["prefill_traces"],
                 eng.stats["decode_traces"]) != traces_before
+
+    # this row's telemetry: drain the ring so per-row events never evict
+    # each other across backends, summarize the spans, count compiles
+    rec = tel.recorder()
+    row_events = rec.drain() if rec is not None else []
+    row_tel = {
+        "spans": tel.summarize_events(row_events),
+        "jax_compile_events": compiles_after - compiles_before,
+        "jax_compile_events_timed": compiles_after - compiles_warm,
+    }
+
+    def fmt(key):
+        v = _ms(lat, key)
+        return f"{v:.1f}" if v is not None else "n/a"
+
     derived = (f"{toks / wall:.1f} tok/s "
-               f"ttft p50 {lat['p50_ttft_s'] * 1e3:.1f} ms "
-               f"p95 {lat['p95_ttft_s'] * 1e3:.1f} ms "
-               f"lat p50 {lat['p50_latency_s'] * 1e3:.1f} ms "
-               f"p95 {lat['p95_latency_s'] * 1e3:.1f} ms "
+               f"ttft p50 {fmt('p50_ttft_s')} "
+               f"p95 {fmt('p95_ttft_s')} p99 {fmt('p99_ttft_s')} ms "
+               f"itl p50 {fmt('p50_itl_s')} "
+               f"p95 {fmt('p95_itl_s')} p99 {fmt('p99_itl_s')} ms "
+               f"lat p50 {fmt('p50_latency_s')} "
+               f"p95 {fmt('p95_latency_s')} p99 {fmt('p99_latency_s')} ms "
                f"({n_requests} reqs @ {RATE_RPS:.0f} rps "
                f"slots={NUM_SLOTS}) "
+               f"compiles={row_tel['jax_compile_events']:.0f} "
                f"{_prov(log, 'prefill')} {_prov(log, 'decode')}"
                + (" RETRACED" if retraced else ""))
     emit(f"serving[{backend}]", wall / max(steps, 1), derived)
-    return {
+    row = {
         "backend": backend,
         "resolved": dict(eng.attn_backends),
         "tok_s": toks / wall,
         "us_per_decode_step": wall / max(steps, 1) * 1e6,
-        "ttft_p50_ms": lat["p50_ttft_s"] * 1e3,
-        "ttft_p95_ms": lat["p95_ttft_s"] * 1e3,
-        "latency_p50_ms": lat["p50_latency_s"] * 1e3,
-        "latency_p95_ms": lat["p95_latency_s"] * 1e3,
+        "ttft_p50_ms": _ms(lat, "p50_ttft_s"),
+        "ttft_p95_ms": _ms(lat, "p95_ttft_s"),
+        "ttft_p99_ms": _ms(lat, "p99_ttft_s"),
+        "itl_p50_ms": _ms(lat, "p50_itl_s"),
+        "itl_p95_ms": _ms(lat, "p95_itl_s"),
+        "itl_p99_ms": _ms(lat, "p99_itl_s"),
+        "latency_p50_ms": _ms(lat, "p50_latency_s"),
+        "latency_p95_ms": _ms(lat, "p95_latency_s"),
+        "latency_p99_ms": _ms(lat, "p99_latency_s"),
         "requests": n_requests,
         "retraced": retraced,
+        "jax_compile_events": row_tel["jax_compile_events"],
+        "telemetry": row_tel,
         "dispatch": log,
     }
+    return row, row_events
 
 
 def run(smoke: bool = False, json_path: str = ARTIFACT) -> Dict[str, Any]:
     cfg = get_config(ARCH, smoke=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
 
-    # before: the status-quo plain-XLA path; after: the registry Pallas
-    # kernels (compiled on TPU, interpret mode on a CPU host — relative
-    # numbers only there, see benchmarks/common.py)
-    backends = ["xla", "pallas" if on_tpu() else "pallas_interpret"]
-    n_requests = 8 if smoke else 24
+    # record the whole run; respect an env-configured recorder
+    # (REPRO_TELEMETRY=jsonl:... keeps its exit flush), else enable an
+    # in-memory one for the duration of the benchmark
+    owned = not tel.enabled()
+    if owned:
+        tel.configure("on")
 
-    rows = [_one_backend(params, cfg, bk, n_requests) for bk in backends]
+    try:
+        # before: the status-quo plain-XLA path; after: the registry Pallas
+        # kernels (compiled on TPU, interpret mode on a CPU host — relative
+        # numbers only there, see benchmarks/common.py)
+        backends = ["xla", "pallas" if on_tpu() else "pallas_interpret"]
+        n_requests = 8 if smoke else 24
 
-    artifact = {
-        "schema": SCHEMA,
-        "arch": ARCH,
-        "smoke": bool(smoke),
-        "platform": jax.devices()[0].platform,
-        "num_slots": NUM_SLOTS,
-        "cache_len": CACHE_LEN,
-        "prefill_len": PREFILL_LEN,
-        "rows": rows,
-    }
-    with open(json_path, "w") as f:
-        json.dump(artifact, f, indent=1, sort_keys=True)
-    return artifact
+        rows = []
+        events: List[Dict[str, Any]] = []
+        for bk in backends:
+            row, row_events = _one_backend(params, cfg, bk, n_requests)
+            rows.append(row)
+            events.extend(row_events)
+
+        rec = tel.recorder()
+        events.extend(rec.drain() if rec is not None else [])
+        stem = json_path[:-5] if json_path.endswith(".json") else json_path
+        trace_jsonl = f"{stem}_trace.jsonl"
+        trace_chrome = f"{stem}_trace.json"
+        meta = {"benchmark": "serving", "arch": ARCH, "schema_of": SCHEMA}
+        if rec is not None:
+            snap = rec.snapshot()     # counters/gauges survive the drains
+            snap["span_summary"] = tel.summarize_events(events)
+            tel.write_jsonl(trace_jsonl, events, meta=meta,
+                            footer_data=snap)
+            tel.write_chrome_trace(trace_chrome, events, meta=meta)
+        else:  # pragma: no cover - recorder always on here
+            snap = {}
+
+        artifact = {
+            "schema": SCHEMA,
+            "arch": ARCH,
+            "smoke": bool(smoke),
+            "platform": jax.devices()[0].platform,
+            "num_slots": NUM_SLOTS,
+            "cache_len": CACHE_LEN,
+            "prefill_len": PREFILL_LEN,
+            "jax_compile_events": snap.get("counters", {}).get(
+                COMPILE_COUNTER, 0.0),
+            "telemetry": snap,
+            "trace_jsonl": trace_jsonl,
+            "trace_chrome": trace_chrome,
+            "rows": rows,
+        }
+        with open(json_path, "w") as f:
+            json.dump(artifact, f, indent=1, sort_keys=True)
+        return artifact
+    finally:
+        if owned:
+            tel.configure("off")
 
 
 if __name__ == "__main__":

@@ -79,8 +79,13 @@ def main() -> None:
     print(f"\nserved {len(done)} requests, {s['tokens_generated']} tokens "
           f"in {dt:.2f}s ({s['tokens_generated'] / dt:.1f} tok/s)")
     print(f"latency p50 {lat['p50_latency_s'] * 1e3:.1f} ms "
-          f"p95 {lat['p95_latency_s'] * 1e3:.1f} ms; "
-          f"ttft p50 {lat['p50_ttft_s'] * 1e3:.1f} ms")
+          f"p95 {lat['p95_latency_s'] * 1e3:.1f} ms "
+          f"p99 {lat['p99_latency_s'] * 1e3:.1f} ms; "
+          f"ttft p50 {lat['p50_ttft_s'] * 1e3:.1f} ms "
+          f"p99 {lat['p99_ttft_s'] * 1e3:.1f} ms"
+          + (f"; itl p50 {lat['p50_itl_s'] * 1e3:.2f} ms "
+             f"p99 {lat['p99_itl_s'] * 1e3:.2f} ms"
+             if "p99_itl_s" in lat else ""))
     print(f"compiled shapes: prefill x{s['prefill_traces']} "
           f"decode x{s['decode_traces']} "
           f"({s['prefill_calls']} prefills, {s['decode_steps']} decode steps)")

@@ -41,6 +41,8 @@ from typing import (Any, Callable, Dict, Iterator, List, Mapping, Optional,
 import jax
 import numpy as np
 
+from repro.core import telemetry as tel
+
 __all__ = [
     "Backend",
     "BackendUnavailableError",
@@ -313,18 +315,34 @@ class PortableKernel:
         runs; we do the same.  ``warmup=0`` is allowed (the timed loop then
         includes compilation in its first sample — the median still drops it
         for ``iters >= 3``).
+
+        Each call emits one ``registry.time_backend`` telemetry span tagged
+        with (kernel, backend, params) — the per-measurement provenance the
+        Eq.-4 table is built from — with per-iteration ``registry.measure``
+        child spans inside it.  All events fire at the driver level, outside
+        the measured regions' compiled code, and timing uses the same
+        ``perf_counter`` reads as before: telemetry off is bitwise the
+        status quo.
         """
         fn = self._require_available(backend)
-        out = None
-        for _ in range(warmup):
-            out = fn(*args, **kwargs)
-        jax.block_until_ready(out)
-        times = []
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            out = fn(*args, **kwargs)
+        params = {k: v for k, v in kwargs.items()
+                  if isinstance(v, (bool, int, float, str, tuple))}
+        with tel.span("registry.time_backend", proc="registry",
+                      kernel=self.name, backend=backend, iters=iters,
+                      warmup=warmup, params=params):
+            out = None
+            for _ in range(warmup):
+                out = fn(*args, **kwargs)
             jax.block_until_ready(out)
-            times.append(time.perf_counter() - t0)
+            times = []
+            for _ in range(iters):
+                with tel.span("registry.measure", proc="registry",
+                              kernel=self.name, backend=backend):
+                    t0 = time.perf_counter()
+                    out = fn(*args, **kwargs)
+                    jax.block_until_ready(out)
+                    times.append(time.perf_counter() - t0)
+        tel.counter("registry.time_backend.calls", proc="registry")
         return float(np.median(times))
 
     def figure_of_merit(self, elapsed_s: float, *args: Any,

@@ -1,0 +1,8 @@
+"""CLI entry point: ``python -m repro.core.telemetry summarize <trace>``."""
+
+import sys
+
+from repro.core.telemetry.summarize import main
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

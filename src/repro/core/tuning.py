@@ -50,6 +50,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 
+from repro.core import telemetry as tel
 from repro.core.portable import (BackendUnavailableError, PortableKernel,
                                  registry)
 
@@ -488,11 +489,13 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
             # a budgeted (coordinate) entry must not satisfy an exhaustive
             # request — fall through and run the full sweep instead
             if not (hit_search == "coordinate" and not coordinate):
+                tel.counter("tuning.cache.hit", proc="tuning")
                 return TuningResult(
                     kernel=kernel.name, backend=backend,
                     params=params_from_cache(hit["params"]),
                     seconds=float(hit["seconds"]), swept=[], cached=True,
                     search=hit_search)
+        tel.counter("tuning.cache.miss", proc="tuning")
 
     # max_points is the smoke lane's hard work bound and applies to BOTH
     # strategies: exhaustive sweeps drop the grid tail, coordinate descent
@@ -507,6 +510,7 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
             skipped="no valid tunable point for these inputs")
 
     swept: List[Tuple[Dict[str, Any], float]] = []
+    mode = "coordinate" if coordinate else "exhaustive"
 
     def time_point(point):
         try:
@@ -516,21 +520,26 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
             # a point the constraint failed to exclude — record and move on
             secs = float("inf")
         swept.append((point, secs))
+        tel.instant("tuning.point", proc="tuning", kernel=kernel.name,
+                    backend=backend, params=point, seconds=secs,
+                    search=mode)
         return secs
 
-    if coordinate:
-        if budget is None:
-            budget = 2 * sum(len(v) for v in space.params.values())
-        if max_points is not None:
-            budget = min(budget, max_points)
-        best_params, best_secs = _coordinate_descent(
-            kernel, space, points, max(budget, 1), time_point)
-    else:
-        best_params, best_secs = None, float("inf")
-        for point in points:
-            secs = time_point(point)
-            if secs < best_secs:
-                best_secs, best_params = secs, point
+    with tel.span("tuning.tune", proc="tuning", kernel=kernel.name,
+                  backend=backend, search=mode, points=len(points)):
+        if coordinate:
+            if budget is None:
+                budget = 2 * sum(len(v) for v in space.params.values())
+            if max_points is not None:
+                budget = min(budget, max_points)
+            best_params, best_secs = _coordinate_descent(
+                kernel, space, points, max(budget, 1), time_point)
+        else:
+            best_params, best_secs = None, float("inf")
+            for point in points:
+                secs = time_point(point)
+                if secs < best_secs:
+                    best_secs, best_params = secs, point
 
     if best_params is None or best_secs == float("inf"):
         return TuningResult(
@@ -538,7 +547,6 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
             seconds=float("inf"), swept=swept, cached=False,
             skipped="every tunable point failed to run")
 
-    mode = "coordinate" if coordinate else "exhaustive"
     result = TuningResult(kernel=kernel.name, backend=backend,
                           params=best_params, seconds=best_secs, swept=swept,
                           cached=False, search=mode)
@@ -574,7 +582,10 @@ def cached_entry(kernel: PortableKernel, *args: Any, backend: str,
     through :func:`cached_best_params`."""
     if cache is None:
         cache = _default_cache()
-    return cache.get(make_key(kernel, *args, backend=backend, **kwargs))
+    hit = cache.get(make_key(kernel, *args, backend=backend, **kwargs))
+    tel.counter("tuning.cache.hit" if hit is not None
+                else "tuning.cache.miss", proc="tuning")
+    return hit
 
 
 def cached_best_params(kernel: PortableKernel, *args: Any, backend: str,

@@ -17,9 +17,11 @@ no backend is requested, so training and default serving are bitwise
 unchanged.
 
 Dispatch happens at trace time (all decisions are static on shapes/flags),
-and each routing decision is recorded in a module-level dispatch log so
-benchmarks can report *which* backend and tuning provenance a timed program
-actually used (``reset_dispatch_log`` / ``dispatch_log``).
+and each routing decision lands in a bounded dispatch stream so benchmarks
+can report *which* backend and tuning provenance a timed program actually
+used (``reset_dispatch_log`` / ``dispatch_log`` for the last decision per
+kind, ``dispatch_records`` for the full history) — and, when telemetry is
+enabled, as ``attn.dispatch`` events on the shared trace.
 
 Soundness contract for the Pallas prefill route: positions must be
 index-aligned up to a non-negative per-row left-pad offset (``pos[i] <= i``,
@@ -39,6 +41,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import telemetry as tel
 from repro.models.common import Params, apply_rope, dense_init
 
 NEG_INF = -1e30
@@ -133,29 +136,55 @@ def attend_xla(q, k, v, q_pos, k_pos, *, n_kv_heads: int, causal: bool,
 # --------------------------------------------------------------------------
 # registry dispatch
 # --------------------------------------------------------------------------
-_DISPATCH_LOG: Dict[str, Dict[str, Any]] = {}
+#: how many routing decisions the bounded dispatch stream retains.  The
+#: pre-PR-8 log was a dict keyed only by kind — concurrent engines or
+#: repeated per-backend benchmark rows silently overwrote each other's
+#: records; the stream keeps the full recent history (oldest evicted).
+DISPATCH_LOG_CAP = 256
+
+_DISPATCH_RECORDS = tel.RingLog(capacity=DISPATCH_LOG_CAP)
 
 
 def reset_dispatch_log() -> None:
     """Clear the trace-time routing record (call before (re)compiling the
     program whose dispatch you want to observe)."""
-    _DISPATCH_LOG.clear()
+    _DISPATCH_RECORDS.clear()
 
 
 def dispatch_log() -> Dict[str, Dict[str, Any]]:
-    """Snapshot of the last routing decision per dispatch kind
+    """Snapshot of the *last* routing decision per dispatch kind
     (``"prefill"`` / ``"decode"``): resolved backend, tuning provenance
     (``"exhaustive"`` / ``"coordinate"`` / ``"miss-default"``), injected
     params, and the reason when a Pallas route fell back to XLA.
 
     Populated at *trace* time: a jit cache hit re-runs no dispatch and
-    leaves the log untouched.
+    leaves the log untouched.  This is the last-decision-per-kind view the
+    benchmark rows read; the full bounded history (every decision, in
+    order, across engines/backends) is :func:`dispatch_records`.
     """
-    return {k: dict(v) for k, v in _DISPATCH_LOG.items()}
+    out: Dict[str, Dict[str, Any]] = {}
+    for rec in _DISPATCH_RECORDS.records():
+        fields = dict(rec)
+        out[fields.pop("kind")] = fields
+    return out
+
+
+def dispatch_records() -> list:
+    """The full bounded dispatch stream, oldest first: each record carries
+    ``kind`` plus the fields of :func:`dispatch_log`.  Survives the
+    last-write-wins collapse — two engines tracing concurrently, or one
+    benchmark tracing per-backend rows back to back, each keep their
+    entries (up to ``DISPATCH_LOG_CAP``)."""
+    return _DISPATCH_RECORDS.records()
 
 
 def _log(kind: str, **fields: Any) -> None:
-    _DISPATCH_LOG[kind] = fields
+    _DISPATCH_RECORDS.append({"kind": kind, **fields})
+    tel.instant("attn.dispatch", proc="dispatch", kind=kind, **fields)
+    tel.counter(f"attn.dispatch.{kind}.{fields.get('backend', '?')}",
+                proc="dispatch")
+    if "fallback" in fields:
+        tel.counter("attn.dispatch.fallback", proc="dispatch")
 
 
 def _requested_backend(backend: Optional[str]) -> Optional[str]:

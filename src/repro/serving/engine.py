@@ -25,6 +25,15 @@ Supported models: decoder-only attention archs (dense / MoE / SWA).  RWKV
 and SSM/hybrid state caches and encoder-decoder memory are per-request state
 this slot scatter does not yet carry; MoE capacity routing is batch-coupled,
 so MoE outputs can differ from unbatched decode.
+
+Telemetry: when ``REPRO_TELEMETRY`` is on, the engine emits a full request
+lifecycle on the ``engine`` track — ``serving.enqueue`` ->
+``serving.slot_assign`` -> a ``serving.prefill`` span -> ``serving.first_token``
+-> per-step ``serving.decode_step`` spans -> ``serving.finish`` — plus
+``serving.queue_depth`` / ``serving.slot_occupancy`` gauges sampled per
+step.  All events fire at the Python driver level around the two compiled
+programs, never inside them: enabling telemetry changes no compiled shape
+and no sampled token (bitwise-neutral by construction).
 """
 
 from __future__ import annotations
@@ -38,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import telemetry as tel
 from repro.models.attention import resolve_attention_backend
 from repro.models.transformer import forward, init_caches
 from repro.training.serve_step import decode_step, sample, sample_per_slot
@@ -142,6 +152,10 @@ class ServingEngine:
         if req.key is None:
             req.key = jax.random.fold_in(self._base_key, req.uid)
         self.queue.submit(req)
+        tel.instant("serving.enqueue", proc="engine", uid=req.uid,
+                    prompt_len=req.prompt_len,
+                    max_new_tokens=req.max_new_tokens,
+                    queue_depth=len(self.queue))
 
     def _finish(self, slot: int, req: Request, now: float,
                 finished: List[Request]) -> None:
@@ -150,12 +164,18 @@ class ServingEngine:
         self.slots.free(slot)
         self.stats["requests_finished"] += 1
         finished.append(req)
+        tel.instant("serving.finish", proc="engine", uid=req.uid, slot=slot,
+                    tokens=len(req.generated),
+                    latency_s=req.t_done - req.arrival_time)
+        tel.counter("serving.requests_finished", proc="engine")
 
     def _admit(self, req: Request, now: float,
                finished: List[Request]) -> None:
         slot = self.slots.alloc()
         self.slot_req[slot] = req
         req.t_admitted = now
+        tel.instant("serving.slot_assign", proc="engine", uid=req.uid,
+                    slot=slot, queued_s=now - req.arrival_time)
         L = req.prompt_len
         toks = np.zeros((1, self.prefill_len), np.int32)
         toks[0, self.prefill_len - L:] = req.prompt        # left-pad
@@ -163,13 +183,19 @@ class ServingEngine:
             req.key, sub = jax.random.split(req.key)
         else:
             sub = req.key       # greedy: sample() never consumes the key
-        tok0, self.caches = self._prefill(
-            self.params, jnp.asarray(toks),
-            jnp.asarray([L], jnp.int32), np.int32(slot), sub, self.caches)
+        with tel.span("serving.prefill", proc="engine", uid=req.uid,
+                      slot=slot, prompt_len=L):
+            tok0, self.caches = self._prefill(
+                self.params, jnp.asarray(toks),
+                jnp.asarray([L], jnp.int32), np.int32(slot), sub,
+                self.caches)
+            tok0 = int(tok0)     # device sync: the span covers the wait
         self.stats["prefill_calls"] += 1
-        tok0 = int(tok0)
         now = self._clock()
         req.t_first_token = now
+        req.t_tokens.append(now)
+        tel.instant("serving.first_token", proc="engine", uid=req.uid,
+                    slot=slot, ttft_s=now - req.arrival_time)
         req.generated.append(tok0)
         self.stats["tokens_generated"] += 1
         if len(req.generated) >= req.max_new_tokens or tok0 == req.eos_id:
@@ -190,23 +216,30 @@ class ServingEngine:
         if self.active_count() == 0:
             return finished
 
+        active = self.active_count()
+        tel.gauge("serving.queue_depth", len(self.queue), proc="engine")
+        tel.gauge("serving.slot_occupancy", active / self.num_slots,
+                  proc="engine")
         keys = np.zeros((self.num_slots, 2), np.uint32)
         if self.temperature > 0.0:      # greedy path never reads the keys
             for s, req in enumerate(self.slot_req):
                 if req is not None:
                     req.key, sub = jax.random.split(req.key)
                     keys[s] = np.asarray(sub)
-        toks, self.caches = self._decode(
-            self.params, jnp.asarray(self.tok_buf),
-            jnp.asarray(self.pos_buf), jnp.asarray(keys), self.caches)
+        with tel.span("serving.decode_step", proc="engine", active=active,
+                      step=self.stats["decode_steps"]):
+            toks, self.caches = self._decode(
+                self.params, jnp.asarray(self.tok_buf),
+                jnp.asarray(self.pos_buf), jnp.asarray(keys), self.caches)
+            toks = np.asarray(toks)      # device sync inside the span
         self.stats["decode_steps"] += 1
-        toks = np.asarray(toks)
         now = self._clock()
         for s, req in enumerate(self.slot_req):
             if req is None:                      # inactive slot: token ignored
                 continue
             t = int(toks[s])
             req.generated.append(t)
+            req.t_tokens.append(now)
             self.stats["tokens_generated"] += 1
             if len(req.generated) >= req.max_new_tokens or t == req.eos_id:
                 self._finish(s, req, now, finished)
@@ -219,14 +252,16 @@ class ServingEngine:
         """Serve a trace to completion.  Resets the engine clock to 0, so
         `arrival_time` fields are relative to the start of this call."""
         self._t0 = time.perf_counter()
-        for req in sorted(requests, key=lambda r: r.arrival_time):
-            self.submit(req)
-        finished: List[Request] = []
-        while self.queue or self.active_count():
-            now = self._clock()
-            if self.active_count() == 0 and not self.queue.has_ready(now):
-                nxt = self.queue.next_arrival()
-                time.sleep(min(1e-3, max(0.0, nxt - now)))
-                continue
-            finished.extend(self.step(now))
+        with tel.span("serving.run", proc="engine",
+                      requests=len(requests), num_slots=self.num_slots):
+            for req in sorted(requests, key=lambda r: r.arrival_time):
+                self.submit(req)
+            finished: List[Request] = []
+            while self.queue or self.active_count():
+                now = self._clock()
+                if self.active_count() == 0 and not self.queue.has_ready(now):
+                    nxt = self.queue.next_arrival()
+                    time.sleep(min(1e-3, max(0.0, nxt - now)))
+                    continue
+                finished.extend(self.step(now))
         return finished

@@ -31,6 +31,9 @@ class Request:
     t_admitted: float = math.nan         # slot assigned (prefill start)
     t_first_token: float = math.nan
     t_done: float = math.nan
+    # engine-clock timestamp of every generated token (t_tokens[0] is the
+    # first token) — inter-token-latency percentiles come from the diffs
+    t_tokens: List[float] = dataclasses.field(default_factory=list)
     key: object = None                   # per-request PRNG key stream
 
     @property
@@ -48,6 +51,11 @@ class Request:
     def ttft(self) -> float:
         """Arrival -> first token (queueing + prefill)."""
         return self.t_first_token - self.arrival_time
+
+    def inter_token_gaps(self) -> List[float]:
+        """Seconds between consecutive generated tokens (empty for
+        single-token generations or requests not served by the engine)."""
+        return [b - a for a, b in zip(self.t_tokens, self.t_tokens[1:])]
 
 
 class RequestQueue:

@@ -32,12 +32,30 @@ def synthetic_trace(n_requests: int, *, vocab_size: int, rate: float = 50.0,
 
 
 def latency_summary(requests: Sequence[Request]) -> Dict[str, float]:
-    """p50/p95 of end-to-end latency and time-to-first-token (seconds)."""
-    lats = np.asarray([r.latency() for r in requests])
-    ttfts = np.asarray([r.ttft() for r in requests])
-    return {
-        "p50_latency_s": float(np.percentile(lats, 50)),
-        "p95_latency_s": float(np.percentile(lats, 95)),
-        "p50_ttft_s": float(np.percentile(ttfts, 50)),
-        "p95_ttft_s": float(np.percentile(ttfts, 95)),
-    }
+    """SLO percentiles over the *completed* requests (seconds).
+
+    p50/p95/p99 of end-to-end latency and time-to-first-token, plus
+    p50/p95/p99 inter-token latency pooled across every request's
+    consecutive-token gaps (``Request.inter_token_gaps``; requests without
+    per-token timestamps — e.g. hand-built test fixtures — contribute no
+    gaps, and the ``itl`` keys are omitted when no request has any).
+
+    A trace where nothing finished returns the explicit empty summary
+    ``{"requests": 0}`` instead of crashing ``np.percentile`` on an empty
+    list.
+    """
+    done = [r for r in requests if r.finished]
+    out: Dict[str, float] = {"requests": len(done)}
+    if not done:
+        return out
+    lats = np.asarray([r.latency() for r in done])
+    ttfts = np.asarray([r.ttft() for r in done])
+    for q in (50, 95, 99):
+        out[f"p{q}_latency_s"] = float(np.percentile(lats, q))
+        out[f"p{q}_ttft_s"] = float(np.percentile(ttfts, q))
+    gaps = [g for r in done for g in r.inter_token_gaps()]
+    if gaps:
+        arr = np.asarray(gaps)
+        for q in (50, 95, 99):
+            out[f"p{q}_itl_s"] = float(np.percentile(arr, q))
+    return out

@@ -1,0 +1,383 @@
+"""Telemetry-core tests: span nesting, ring eviction, disabled no-op,
+Chrome-trace export, the once-per-call (not once-per-trace) regression, the
+bounded attention dispatch stream, the serving SLO percentiles, and the
+summarize CLI smoke on a trace emitted by a real engine run."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import telemetry as tel
+from repro.core.telemetry import jaxmon
+from repro.models import attention as A
+from repro.models import transformer as T
+from repro.serving import Request, ServingEngine
+from repro.serving.trace import latency_summary, synthetic_trace
+
+CFG = get_config("granite-3-8b", smoke=True)
+
+
+@pytest.fixture
+def telem():
+    """Fresh in-memory recorder for the test; restores the env default
+    (off, unless REPRO_TELEMETRY is set) afterwards."""
+    rec = tel.configure("on")
+    yield rec
+    tel.configure(os.environ.get(tel.ENV))
+
+
+@pytest.fixture(scope="module")
+def params():
+    return T.init_params(CFG, jax.random.PRNGKey(0))
+
+
+# --------------------------------------------------------------------------
+# core: spans, ring, no-op
+# --------------------------------------------------------------------------
+def test_span_nesting_records_parent(telem):
+    with tel.span("outer", proc="t") as outer:
+        with tel.span("inner", proc="t"):
+            with tel.span("leaf", proc="t"):
+                pass
+    spans = {e["name"]: e for e in telem.event_list()
+             if e["kind"] == "span"}
+    assert set(spans) == {"outer", "inner", "leaf"}
+    assert spans["outer"]["parent"] is None
+    assert spans["inner"]["parent"] == spans["outer"]["sid"] == outer.sid
+    assert spans["leaf"]["parent"] == spans["inner"]["sid"]
+    # children close before parents: dur nests
+    assert spans["outer"]["dur"] >= spans["inner"]["dur"] >= \
+        spans["leaf"]["dur"] >= 0.0
+    # instants inherit the enclosing span as parent
+    with tel.span("p") as p:
+        tel.instant("mark")
+    mark = [e for e in telem.event_list() if e["name"] == "mark"][0]
+    assert mark["parent"] == p.sid
+
+
+def test_ring_buffer_cap_evicts_oldest():
+    rec = tel.configure("on", capacity=5)
+    try:
+        for i in range(12):
+            tel.instant(f"e{i}")
+        events = rec.event_list()
+        assert len(events) == 5
+        assert [e["name"] for e in events] == [f"e{i}" for i in range(7, 12)]
+        assert rec.dropped == 7
+        snap = rec.snapshot()
+        assert snap["events_dropped"] == 7
+        # aggregates never evict: counters survive ring churn
+        tel.counter("c")
+        for i in range(10):
+            tel.instant("spam")
+        assert rec.snapshot()["counters"]["c"] == 1.0
+    finally:
+        tel.configure(os.environ.get(tel.ENV))
+
+
+def test_disabled_mode_is_noop():
+    tel.configure("off")
+    assert not tel.enabled() and tel.recorder() is None
+    # shared stateless context manager — no per-call allocation
+    assert tel.span("a", proc="x", k=1) is tel.span("b")
+    with tel.span("a"):
+        tel.instant("i")
+        tel.counter("c")
+        tel.gauge("g", 1.0)
+    assert tel.events() == [] and tel.snapshot() == {}
+    rec = tel.configure("on")
+    tel.instant("now-recording")
+    assert len(rec.event_list()) == 1
+    tel.configure(os.environ.get(tel.ENV))
+
+
+def test_configure_rejects_bad_mode():
+    tel.configure("off")
+    with pytest.raises(ValueError):
+        tel.configure("yes-please")
+    with pytest.raises(ValueError):
+        tel.configure("jsonl:")
+    assert not tel.enabled()
+
+
+# --------------------------------------------------------------------------
+# exporters
+# --------------------------------------------------------------------------
+def test_chrome_trace_round_trips(telem, tmp_path):
+    with tel.span("work", proc="engine", kernel="stencil7"):
+        with tel.span("child", proc="engine"):
+            pass
+    tel.gauge("depth", 3.0, proc="engine")
+    tel.instant("mark", proc="worker", uid=1)
+    path = tmp_path / "trace.json"
+    tel.write_chrome_trace(str(path), telem)
+    doc = json.loads(path.read_text())          # well-formed JSON
+    tes = doc["traceEvents"]
+    xs = [t for t in tes if t["ph"] == "X"]
+    assert {t["name"] for t in xs} == {"work", "child"}
+    for t in xs:
+        assert isinstance(t["ts"], float) and isinstance(t["dur"], float)
+        assert t["dur"] >= 0.0 and isinstance(t["pid"], int)
+    cs = [t for t in tes if t["ph"] == "C"]
+    assert cs and cs[0]["args"] == {"depth": 3.0}
+    assert any(t["ph"] == "i" and t["name"] == "mark" for t in tes)
+    # proc labels become named processes via metadata events
+    procs = {t["args"]["name"] for t in tes
+             if t["ph"] == "M" and t["name"] == "process_name"}
+    assert {"engine", "worker"} <= procs
+    # and the summarize CLI reads the chrome form too
+    summary = tel.summarize_file(str(path))
+    assert summary["spans"]["work"]["count"] == 1
+
+
+def test_jsonl_round_trip_and_summary(telem, tmp_path):
+    for i in range(10):
+        with tel.span("op", proc="t", i=i):
+            pass
+    tel.counter("hits", 3)
+    path = tmp_path / "trace.jsonl"
+    n = tel.write_jsonl(str(path), telem, meta={"note": "test"})
+    assert n == len(telem.event_list())
+    doc = tel.read_events(str(path))
+    assert doc["header"]["schema"] == tel.SCHEMA
+    assert doc["header"]["note"] == "test"
+    assert doc["footer"]["counters"] == {"hits": 3.0}
+    summary = tel.summarize_file(str(path))
+    s = summary["spans"]["op"]
+    assert s["count"] == 10
+    assert s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+    assert s["total_ms"] >= s["p99_ms"]
+
+
+def test_percentile_matches_numpy():
+    vals = [3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0]
+    for q in (0, 25, 50, 90, 95, 99, 100):
+        assert tel.percentile(vals, q) == pytest.approx(
+            float(np.percentile(vals, q)))
+    assert tel.percentile([7.0], 95) == 7.0
+    with pytest.raises(ValueError):
+        tel.percentile([], 50)
+
+
+# --------------------------------------------------------------------------
+# trace-time safety: execution events per call, compile events per trace
+# --------------------------------------------------------------------------
+def test_instrumented_jit_emits_once_per_call_not_per_trace():
+    # input built (and synced) BEFORE counting starts, so only f's own
+    # compilation can land in the compile counter
+    x = jnp.arange(8, dtype=jnp.float32)
+    jax.block_until_ready(x)
+
+    @jax.jit
+    def f(v):
+        return v * 2.0 + 1.0
+
+    rec = tel.configure("on")
+    try:
+        for _ in range(3):
+            with tel.span("exec", proc="t"):
+                jax.block_until_ready(f(x))
+        events = rec.event_list()
+        counters = rec.snapshot()["counters"]
+    finally:
+        tel.configure(os.environ.get(tel.ENV))
+    execs = [e for e in events
+             if e["kind"] == "span" and e["name"] == "exec"]
+    assert len(execs) == 3                    # once per CALL
+    # ... while jax compiled (and traced) the function exactly once
+    assert counters[jaxmon.COMPILE_COUNTER] == 1
+    compile_spans = [e for e in events
+                     if e["kind"] == "span" and e["name"] == "jax.compile"]
+    assert len(compile_spans) == 1
+
+
+# --------------------------------------------------------------------------
+# attention dispatch stream (the _DISPATCH_LOG lossiness fix)
+# --------------------------------------------------------------------------
+def test_dispatch_stream_keeps_concurrent_records():
+    A.reset_dispatch_log()
+    # two "engines" (or two benchmark rows) tracing back to back — the old
+    # dict-keyed-by-kind log kept only the last writer per kind
+    A._log("decode", backend="xla", tuning="n/a", params={})
+    A._log("prefill", backend="xla", tuning="n/a", params={})
+    A._log("decode", backend="pallas_interpret", tuning="miss-default",
+           params={"bkv": 64})
+    recs = A.dispatch_records()
+    assert [r["kind"] for r in recs] == ["decode", "prefill", "decode"]
+    assert [r["backend"] for r in recs if r["kind"] == "decode"] == \
+        ["xla", "pallas_interpret"]
+    # the last-per-kind view is API-compatible with the old log
+    log = A.dispatch_log()
+    assert log["decode"]["backend"] == "pallas_interpret"
+    assert log["decode"]["params"] == {"bkv": 64}
+    assert log["prefill"]["backend"] == "xla"
+    assert "kind" not in log["decode"]
+    A.reset_dispatch_log()
+    assert A.dispatch_log() == {} and A.dispatch_records() == []
+
+
+def test_dispatch_stream_is_bounded():
+    A.reset_dispatch_log()
+    for i in range(A.DISPATCH_LOG_CAP + 10):
+        A._log("decode", backend="xla", tuning="n/a", params={}, seq=i)
+    recs = A.dispatch_records()
+    assert len(recs) == A.DISPATCH_LOG_CAP
+    assert recs[-1]["seq"] == A.DISPATCH_LOG_CAP + 9   # newest kept
+    A.reset_dispatch_log()
+
+
+def test_dispatch_flows_into_telemetry(telem):
+    A.reset_dispatch_log()
+    A._log("decode", backend="pallas_interpret", tuning="miss-default",
+           params={}, fallback="why not")
+    names = [e["name"] for e in telem.event_list()]
+    assert "attn.dispatch" in names
+    counters = telem.snapshot()["counters"]
+    assert counters["attn.dispatch.decode.pallas_interpret"] == 1.0
+    assert counters["attn.dispatch.fallback"] == 1.0
+    A.reset_dispatch_log()
+
+
+# --------------------------------------------------------------------------
+# serving SLO percentiles (trace.py satellite)
+# --------------------------------------------------------------------------
+def test_latency_summary_empty_trace_is_explicit():
+    assert latency_summary([]) == {"requests": 0}
+    # submitted-but-never-finished requests count as an empty summary too
+    reqs = synthetic_trace(3, vocab_size=32)
+    assert latency_summary(reqs) == {"requests": 0}
+
+
+def test_latency_summary_p99_and_itl():
+    reqs = synthetic_trace(10, vocab_size=64, rate=100.0, seed=3)
+    for i, r in enumerate(reqs):
+        r.t_first_token = r.arrival_time + 0.01
+        r.t_done = r.arrival_time + 0.1 + 0.01 * i
+        r.t_tokens = [r.t_first_token + 0.005 * k for k in range(4)]
+    lat = latency_summary(reqs)
+    assert lat["requests"] == 10
+    for metric in ("latency", "ttft", "itl"):
+        p50, p95, p99 = (lat[f"p{q}_{metric}_s"] for q in (50, 95, 99))
+        assert p50 <= p95 <= p99
+    assert lat["p50_itl_s"] == pytest.approx(0.005)
+    # gaps are per-request consecutive diffs
+    assert reqs[0].inter_token_gaps() == pytest.approx([0.005] * 3)
+    # without per-token stamps the itl keys are absent, not wrong
+    for r in reqs:
+        r.t_tokens = []
+    lat = latency_summary(reqs)
+    assert "p99_itl_s" not in lat and lat["p99_latency_s"] > 0
+
+
+# --------------------------------------------------------------------------
+# engine lifecycle + CLI smoke (tier-1: tiny synthetic engine run)
+# --------------------------------------------------------------------------
+def _run_engine(params, n=3):
+    eng = ServingEngine(params, CFG, num_slots=2, cache_len=32,
+                        prefill_len=8)
+    reqs = [Request(uid=i,
+                    prompt=np.arange(2 + i, 6 + i, dtype=np.int32),
+                    max_new_tokens=4) for i in range(n)]
+    done = eng.run(reqs)
+    return {r.uid: list(r.generated) for r in done}
+
+
+def test_engine_lifecycle_events_and_cli_smoke(params, tmp_path):
+    rec = tel.configure("on")
+    try:
+        toks_on = _run_engine(params)
+        events = rec.event_list()
+        path = tmp_path / "engine_trace.jsonl"
+        tel.write_jsonl(str(path), rec)
+    finally:
+        tel.configure(os.environ.get(tel.ENV))
+
+    by_name = {}
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e)
+    # full lifecycle, one per request
+    for name in ("serving.enqueue", "serving.slot_assign",
+                 "serving.first_token", "serving.finish"):
+        assert len(by_name[name]) == 3, name
+    assert len(by_name["serving.prefill"]) == 3
+    assert by_name["serving.decode_step"], "no decode-step spans"
+    # decode steps nest under the serving.run span
+    run_sid = by_name["serving.run"][0]["sid"]
+    assert all(e["parent"] == run_sid
+               for e in by_name["serving.decode_step"])
+    # gauges sampled per step
+    assert len(by_name["serving.queue_depth"]) == \
+        len(by_name["serving.decode_step"])
+    assert all(0 < e["value"] <= 1.0
+               for e in by_name["serving.slot_occupancy"])
+    # lifecycle ordering per request uid
+    for uid in range(3):
+        ts = {n: [e["ts"] for e in by_name[n]
+                  if e.get("attrs", {}).get("uid") == uid]
+              for n in ("serving.enqueue", "serving.slot_assign",
+                        "serving.first_token", "serving.finish")}
+        assert ts["serving.enqueue"][0] <= ts["serving.slot_assign"][0] \
+            <= ts["serving.first_token"][0] <= ts["serving.finish"][0]
+
+    # telemetry must not change sampled tokens: bitwise vs the off run
+    assert not tel.enabled()
+    toks_off = _run_engine(params)
+    assert toks_on == toks_off
+
+    # the CLI end of the pipeline: summarize the emitted trace
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH",
+                                                              ""))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.telemetry", "summarize",
+         str(path)],
+        capture_output=True, text=True, env=env, cwd=os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr
+    assert "serving.decode_step" in out.stdout
+    assert "p99_ms" in out.stdout or "p99" in out.stdout
+    assert "serving.requests_finished = 3" in out.stdout
+
+
+# --------------------------------------------------------------------------
+# serving benchmark v3 drift check (slow lane; the --smoke CLI also covers)
+# --------------------------------------------------------------------------
+@pytest.mark.slow
+def test_serving_benchmark_smoke_writes_v3_artifact(tmp_path, monkeypatch):
+    from benchmarks import serving as bench
+
+    monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tuning.json"))
+    json_path = str(tmp_path / "BENCH_serving.json")
+    artifact = bench.run(smoke=True, json_path=json_path)
+    on_disk = json.loads((tmp_path / "BENCH_serving.json").read_text())
+
+    assert on_disk["schema"] == "repro.serving/v3"
+    assert on_disk["jax_compile_events"] > 0      # the recompile counter
+    assert on_disk["telemetry"]["counters"]
+    backends = [r["backend"] for r in on_disk["rows"]]
+    assert backends[0] == "xla" and len(backends) == 2
+    for row in on_disk["rows"]:
+        assert not row["retraced"]
+        for col in ("ttft_p99_ms", "latency_p99_ms", "itl_p50_ms",
+                    "itl_p95_ms", "itl_p99_ms", "jax_compile_events"):
+            assert row[col] is not None and row[col] >= 0, col
+        assert row["telemetry"]["spans"]["serving.decode_step"]["count"] > 0
+    # the pallas row must dispatch through the registry, not fall back
+    assert on_disk["rows"][1]["dispatch"]["decode"]["backend"] != "xla"
+
+    # trace artifacts: JSONL summarizes, chrome form loads
+    summary = tel.summarize_file(artifact["trace_jsonl"])
+    assert summary["spans"]["serving.decode_step"]["count"] > 0
+    assert summary["counters"][jaxmon.COMPILE_COUNTER] == \
+        on_disk["jax_compile_events"]
+    doc = json.loads(open(artifact["trace_chrome"]).read())
+    assert any(t["ph"] == "X" for t in doc["traceEvents"])
+    # telemetry was owned by the benchmark and is off again
+    assert not tel.enabled()
