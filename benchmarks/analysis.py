@@ -3,10 +3,14 @@
 Not a timing benchmark: this module runs ``python -m repro.core.analysis``
 — the registry-wide static kernel auditor — as a child process (the CLI
 re-execs itself under forced host devices for the sharded cells, exactly
-like ``benchmarks/scaling.py``) and republishes its ``repro.analysis/v1``
+like ``benchmarks/scaling.py``) and republishes its ``repro.analysis/v2``
 report as the orchestrator artifact.  The CSV row carries the audit
 wall-clock and the finding/waiver/skip counts as the derived column, so a
-drift in either shows up in the same place every other lane drifts.
+drift in either shows up in the same place every other lane drifts.  Since
+v2 the auditor's findings include the performance passes — traffic
+inflation over a declared limit, a roofline-bound flip against a declared
+contract, and measured-vs-predicted drift beyond the band — so this lane
+gates on those exactly like the correctness passes.
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] --only analysis
 
@@ -51,7 +55,9 @@ def run(smoke: bool = False, json_path: str = ARTIFACT) -> dict:
     s = report["summary"]
     emit("analysis.audit", dt,
          f"cells={s['cells']} findings={s['findings']} "
-         f"waived={s['waived']} skips={s['skips']}")
+         f"waived={s['waived']} skips={s['skips']} "
+         f"costed={len(report.get('cost', {}))} "
+         f"drift_joined={s.get('drift_joined', 0)}")
     if proc.returncode or s["findings"]:
         raise RuntimeError(
             f"static audit found {s['findings']} non-waived finding(s) "

@@ -33,6 +33,9 @@ machine-readable artifact (default ``BENCH_portability.json``):
          "skipped": str | null}],              // reason when not measured
       "distributed_kernels": [...],            // same record shape, one per
                                                // shard_pallas composite
+      "tuning_quality": {...},                 // model-vs-exhaustive regret
+                                               // probe (PR 9), see
+                                               // _model_search_regret
       "phi": {"per_app": {app: float}, "overall": float}
     }
 
@@ -218,6 +221,60 @@ def _measure_backend(kernel, case, backend: str, cache: TuningCache,
     }, e
 
 
+#: kernel whose declared grid anchors the model-vs-exhaustive regret probe
+REGRET_KERNEL = "stencil7"
+
+
+def _model_search_regret(smoke: bool) -> Optional[Dict[str, Any]]:
+    """Search-quality probe: how much does trusting the static cost model
+    cost vs timing the whole grid?
+
+    Runs ``tune(search="model")`` and ``tune(search="exhaustive")`` on the
+    same kernel/inputs against throwaway caches, reports the timed-point
+    savings and the regret ratio, and proves the provenance contract: the
+    cached ``"model"`` entry is never served to an exhaustive caller.
+    Both sweeps time in this process, so the ratio compares like with like.
+    """
+    import tempfile
+
+    kernel = registry.get(REGRET_KERNEL)
+    backend = _portable_backend(kernel)
+    if backend is None:
+        return {"kernel": REGRET_KERNEL, "backend": None,
+                "skipped": "no portable backend available"}
+    # the smoke-size case keeps the probe seconds-scale at every lane
+    args, kwargs = CASES[REGRET_KERNEL].make_args(True)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        cache = TuningCache(path=f"{tmp}/regret.json")
+        tr_ex = tune(kernel, *args, backend=backend, cache=cache,
+                     iters=1, warmup=1, search="exhaustive", **kwargs)
+        tr_model = tune(kernel, *args, backend=backend,
+                        cache=TuningCache(path=f"{tmp}/model.json"),
+                        iters=1, warmup=1, search="model", **kwargs)
+        if tr_ex.skipped or tr_model.skipped:
+            return {"kernel": REGRET_KERNEL, "backend": backend,
+                    "skipped": tr_ex.skipped or tr_model.skipped}
+        # provenance: a cached partial-search entry must trigger a fresh
+        # sweep — not a hit — when the caller asks for exhaustive
+        tr_again = tune(kernel, *args, backend=backend,
+                        cache=TuningCache(path=f"{tmp}/model.json"),
+                        iters=1, warmup=1, search="exhaustive", **kwargs)
+
+    return {
+        "kernel": REGRET_KERNEL, "backend": backend, "skipped": None,
+        "params_exhaustive": tr_ex.params, "params_model": tr_model.params,
+        "seconds_exhaustive": tr_ex.seconds,
+        "seconds_model": tr_model.seconds,
+        "points_timed_exhaustive": len(tr_ex.swept),
+        "points_timed_model": len(tr_model.swept),
+        "regret": max(0.0, tr_model.seconds / tr_ex.seconds - 1.0),
+        "same_point": tr_model.params == tr_ex.params,
+        "model_search_provenance": tr_model.search,
+        "model_hit_served_exhaustive": tr_again.cached,
+    }
+
+
 def run(smoke: bool = False, json_path: str = ARTIFACT,
         cache_path: Optional[str] = None) -> Dict[str, Any]:
     """Walk the registry, tune, time, and emit CSV + JSON.  Returns the
@@ -295,6 +352,14 @@ def run(smoke: bool = False, json_path: str = ARTIFACT,
              f"e={rec['e_i']:.3f} backend={DIST_BACKEND} "
              f"tuned={params_str}")
 
+    tuning_quality = _model_search_regret(smoke)
+    if tuning_quality is not None and "regret" in tuning_quality:
+        emit("tuning.model_regret", tuning_quality["seconds_model"],
+             f"regret={tuning_quality['regret']:.3f} "
+             f"timed={tuning_quality['points_timed_model']}"
+             f"/{tuning_quality['points_timed_exhaustive']} points "
+             f"kernel={tuning_quality['kernel']}")
+
     phi_per_app = {app: phi_bar(terms) for app, terms in app_terms.items()}
     for app, phi in sorted(phi_per_app.items()):
         emit(f"phi.{app}", 0.0, f"phi={phi:.3f}")
@@ -309,6 +374,7 @@ def run(smoke: bool = False, json_path: str = ARTIFACT,
         "smoke": smoke,
         "kernels": records,
         "distributed_kernels": dist_records,
+        "tuning_quality": tuning_quality,
         "phi": {"per_app": phi_per_app, "overall": overall},
     }
     with open(json_path, "w") as f:

@@ -1,59 +1,62 @@
 """Paper Fig. 2 + Tables 2-3 analogue — static kernel profiles.
 
-The paper uses ncu; our dry-run substitute derives, per science kernel:
-arithmetic intensity (FLOP/byte), claimed VMEM working set per BlockSpec,
-and the roofline placement against the TPU-v5e peaks.  Derived column:
-AI + bound classification.
+The paper uses ncu; our dry-run substitute walks the live registry instead
+of a hand-kept kernel list: the conformance CASES supply every family's
+canonical shape, so a kernel registered tomorrow is profiled today.  Per
+kernel it derives arithmetic intensity twice — from the compiled
+(post-fusion) HLO via ``hlo_cost.analyze_hlo`` and from the PR-9 jaxpr
+traffic census — and places the cell on the detected chip's roofline.
+Derived column: compiled AI, census AI cross-check, and the bound verdict.
 """
 
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import emit
-from repro.core.hlo_cost import analyze_hlo
-from repro.core.roofline import TPU_V5E
-from repro.kernels.hartree_fock import ops as hf_ops
-from repro.kernels.hartree_fock import ref as hf_ref
-from repro.kernels.minibude import ops as mb_ops
+from repro.core import conformance
+from repro.core.analysis import cost
+from repro.core.analysis import jaxpr_utils as JU
+from repro.core.hlo_cost import analyze_hlo, arithmetic_intensity
+from repro.core.portable import registry
+from repro.core.roofline import detect_chip
 from repro.kernels.stencil7 import kernel as st_kernel
-from repro.kernels.stencil7 import ops as st_ops
-from repro.kernels.babelstream import ops as bs_ops
+
+#: profiled backend — the compiled-HLO lane needs a single-device compile,
+#: and every family registers an ``xla`` cell
+BACKEND = "xla"
 
 
-def _profile(name, fn, *args):
-    compiled = jax.jit(fn).lower(*args).compile()
-    cost = analyze_hlo(compiled.as_text())
-    ai = cost.flops / max(cost.hbm_bytes, 1.0)
-    ridge = TPU_V5E.peak_flops / TPU_V5E.hbm_bw     # ~240 FLOP/byte on v5e
-    bound = "compute-bound" if ai > ridge else "memory-bound"
-    emit(f"roofline.{name}", 0.0,
-         f"AI={ai:.3f}FLOP/B {bound}")
-    return ai
+def _profile(kernel: str) -> None:
+    case = conformance.CASES.get(kernel)
+    if case is None:        # registry family without a conformance case yet
+        emit(f"roofline.{kernel}", 0.0, "no conformance case")
+        return
+    args, kwargs = case()
+    fn = registry.get(kernel).backends[BACKEND].fn
+
+    compiled = jax.jit(fn).lower(*args, **kwargs).compile()
+    hlo = analyze_hlo(compiled.as_text())
+    ai_hlo = arithmetic_intensity(hlo)
+
+    # cross-check: the execution-free jaxpr census the static auditor uses
+    traffic = cost.census(JU.trace(fn, args, kwargs))
+    ai_jaxpr = traffic.arithmetic_intensity
+
+    chip = detect_chip()
+    v = cost.verdict(traffic, chip)
+    emit(f"roofline.{kernel}", 0.0,
+         f"AI={ai_hlo:.3f}FLOP/B (census {ai_jaxpr:.3f}) "
+         f"{v.bound}-bound@{chip.name} ridge={chip.ridge:.0f}")
 
 
 def run() -> None:
-    rng = np.random.default_rng(0)
-
-    u = jax.ShapeDtypeStruct((128, 128, 128), jnp.float32)
-    _profile("stencil7.L128", st_ops.laplacian_xla, u)
+    kernels = sorted({k for k, b in conformance.conformance_pairs()
+                      if b == BACKEND})
+    for kernel in kernels:
+        _profile(kernel)
     emit("roofline.stencil7.vmem_set", 0.0,
-         f"{st_kernel.vmem_working_set_bytes((128,128,128), 4, 64)}B")
-
-    n = 1 << 22
-    a = jax.ShapeDtypeStruct((n,), jnp.float32)
-    _profile("babelstream.triad", lambda b, c: bs_ops.ref.triad(b, c), a, a)
-    _profile("babelstream.dot", lambda x, y: bs_ops.ref.dot(x, y), a, a)
-
-    deck = mb_ops.make_deck(natpro=256, natlig=16, nposes=2048, seed=0)
-    deck_sds = tuple(jax.ShapeDtypeStruct(d.shape, d.dtype) for d in deck)
-    _profile("minibude.fasten", mb_ops.fasten_xla, *deck_sds)
-
-    pos = jax.ShapeDtypeStruct((16, 3), jnp.float32)
-    dens = jax.ShapeDtypeStruct((16, 16), jnp.float32)
-    _profile("hartree_fock.a16", hf_ops.fock_xla, pos, dens)
+         f"{st_kernel.vmem_working_set_bytes((128, 128, 128), 4, 64)}B")
 
 
 if __name__ == "__main__":

@@ -23,9 +23,25 @@ four passes run without executing anything:
   4. **recompile** (`analysis.recompile`) — AST scan for lru_cache'd
      trace-producing builders keyed on runtime Python scalars.
 
+PR 9 added the static *performance* auditor (`analysis.cost`) on the same
+traces — the execution-free twin of `benchmarks/portability.py`:
+
+  5. **traffic** — HBM byte/FLOP census with loop/grid multiplicities and
+     BlockSpec-enumerated halo re-reads + accumulator revisits; traffic
+     beyond the declared inflation limit over the compulsory boundary
+     bytes is a finding;
+  6. **roofline** — arithmetic intensity × the detected ChipSpec →
+     predicted ms, memory/compute/collective bound verdict, statically
+     attainable Eq.-4 fraction; a flip vs `declare_roofline_contract` is
+     a finding;
+  7. **drift** — predictions joined against measured time (PR-2 tuning
+     cache + PR-8 telemetry), self-calibrated by the median
+     measured/predicted ratio; a cell beyond the tolerance band is the
+     "left N× on the table" finding.
+
 The audited matrix derives from ``conformance.conformance_pairs()`` — never
 a hand-written list.  ``python -m repro.core.analysis`` walks it (re-execing
-under 8 forced host devices when needed) and writes a ``repro.analysis/v1``
+under 8 forced host devices when needed) and writes a ``repro.analysis/v2``
 JSON report; ``tests/test_static_analysis.py`` parametrizes the same matrix.
 """
 
@@ -33,7 +49,7 @@ from __future__ import annotations
 
 from typing import Any, Dict, List, Optional, Tuple
 
-from repro.core.analysis import collectives_audit, dtypes, grid, recompile
+from repro.core.analysis import collectives_audit, cost, dtypes, grid, recompile
 from repro.core.analysis import jaxpr_utils as JU
 from repro.core.analysis.report import (PASSES, SCHEMA, CellResult, Finding,
                                         SkipRecord, assemble_report)
@@ -190,8 +206,27 @@ def audit_cell(kernel: str, backend: str, *,
     res.findings.extend(gfindings)
     passes_run.append("grid")
 
+    # --- passes 5 + 6: traffic census + roofline verdict -----------------
+    from repro.core.roofline import detect_chip
+    chip = detect_chip()
+    try:
+        tr = cost.census(closed)
+        v = cost.verdict(tr, chip)
+        res.findings.extend(cost.traffic_findings(
+            kernel, backend, k, tr, variant=_variant_tag(default_kw)))
+        res.findings.extend(cost.roofline_findings(kernel, backend, k, tr, v))
+        res.cost = {"chip": chip.name, "traffic": tr.to_json(),
+                    "verdict": v.to_json(), "points": [],
+                    "best_predicted": None}
+        passes_run.extend(["traffic", "roofline"])
+    except Exception as exc:
+        for p in ("traffic", "roofline"):
+            res.skips.append(SkipRecord(kernel, backend, p, _short(exc)))
+
     # full audit: cross-check the declared TunableSpace constraint — every
-    # constraint-valid point must still satisfy the coverage proof
+    # constraint-valid point must still satisfy the coverage proof AND get
+    # its own traffic census (a block size that re-streams whole operands
+    # is a per-point defect the default point can't show)
     space = k.tunable_space(backend)
     if not smoke and ncalls and space is not None:
         try:
@@ -221,18 +256,53 @@ def audit_cell(kernel: str, backend: str, *,
             pfind, _ = grid.run(kernel, backend, pclosed, accum,
                                 variant=_variant_tag(pt))
             res.findings.extend(pfind)
+            if res.cost is None:
+                continue
+            try:
+                ptr = cost.census(pclosed)
+                pv = cost.verdict(ptr, chip)
+            except Exception as exc:
+                res.skips.append(SkipRecord(
+                    kernel, backend, "traffic",
+                    f"point {_variant_tag(pt)} not costable: {_short(exc)}"))
+                continue
+            res.findings.extend(cost.traffic_findings(
+                kernel, backend, k, ptr, variant=_variant_tag(pt)))
+            res.cost["points"].append({
+                "params": {n: repr(v) for n, v in pt.items()},
+                "flops": ptr.flops, "hbm_bytes": ptr.hbm_bytes,
+                "inflation": ptr.inflation,
+                "predicted_ms": pv.predicted_s * 1e3, "bound": pv.bound})
+
+    if res.cost is not None and res.cost["points"]:
+        best = min(res.cost["points"], key=lambda p: p["predicted_ms"])
+        res.cost["best_predicted"] = best["params"]
 
     res.passes_run = tuple(passes_run)
     return res
 
 
-def audit_registry(*, smoke: bool = False) -> Dict[str, Any]:
-    """Audit the whole derived matrix and assemble the v1 report."""
+def audit_registry(*, smoke: bool = False, tuning_cache: Any = None,
+                   telemetry_trace: Optional[str] = None,
+                   drift_band: Optional[float] = None) -> Dict[str, Any]:
+    """Audit the whole derived matrix and assemble the v2 report.
+
+    The per-cell passes (1–6) run first; the registry-level drift gate
+    (pass 7) then joins the tuning cache (``tuning_cache`` path, default
+    the process cache) and optional ``telemetry_trace`` JSONL against the
+    static predictions for the same matrix.
+    """
     import jax
 
-    cells = [audit_cell(k, b, smoke=smoke) for k, b in audit_pairs(smoke)]
+    from repro.core.roofline import detect_chip
+
+    pairs = audit_pairs(smoke)
+    cells = [audit_cell(k, b, smoke=smoke) for k, b in pairs]
+    drift = cost.drift_gate(cache_path=tuning_cache,
+                            trace_path=telemetry_trace,
+                            pairs=set(pairs), band=drift_band)
     return assemble_report(cells, device_count=jax.device_count(),
-                           smoke=smoke)
+                           smoke=smoke, chip=detect_chip().name, drift=drift)
 
 
 def write_report(report: Dict[str, Any], path: str) -> None:

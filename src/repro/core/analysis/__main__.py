@@ -1,7 +1,8 @@
 """CLI: ``python -m repro.core.analysis`` — audit the whole registry.
 
-Walks the derived (kernel, backend) matrix, runs the four static passes,
-writes a ``repro.analysis/v1`` JSON report, and exits nonzero iff any
+Walks the derived (kernel, backend) matrix, runs the seven static passes
+(four correctness + the PR-9 traffic/roofline/drift performance passes),
+writes a ``repro.analysis/v2`` JSON report, and exits nonzero iff any
 non-waived finding survives.  The sharded backends only *trace* on a
 multi-device topology, so when the parent process is pinned to one device
 the CLI re-execs itself under ``--xla_force_host_platform_device_count=8``
@@ -30,6 +31,14 @@ def _print_summary(report) -> None:
           f"{s['skips']} skip(s) "
           f"[device_count={report['device_count']}"
           f"{', smoke' if report['smoke'] else ''}]")
+    drift = report.get("drift", {})
+    if drift:
+        cal = drift.get("calibration")
+        cal_s = f"{cal:.1f}x" if cal is not None else "n/a"
+        print(f"  perf model: chip={report.get('chip')}, "
+              f"{len(report.get('cost', {}))} cells costed, drift joins "
+              f"{drift.get('joined', 0)}/{drift.get('measurements', 0)} "
+              f"(calibration {cal_s}, band {drift.get('band')}x)")
     for f in report["findings"]:
         print(f"  FINDING {f['kernel']}[{f['backend']}] {f['pass_name']}/"
               f"{f['code']}: {f['message']}")
@@ -41,15 +50,18 @@ def _print_summary(report) -> None:
               f"{s_['pass_name']}: {s_['reason']}")
 
 
-def _audit_here(smoke: bool, json_path: str) -> int:
+def _audit_here(args) -> int:
     from repro.core import analysis
-    report = analysis.audit_registry(smoke=smoke)
-    analysis.write_report(report, json_path)
+    report = analysis.audit_registry(smoke=args.smoke,
+                                     tuning_cache=args.tuning_cache,
+                                     telemetry_trace=args.telemetry,
+                                     drift_band=args.drift_band)
+    analysis.write_report(report, args.json)
     _print_summary(report)
     return 1 if report["summary"]["findings"] else 0
 
 
-def _reexec(smoke: bool, json_path: str, devices: int) -> int:
+def _reexec(args, devices: int) -> int:
     from repro.launch.hostsim import merged_xla_flags
     env = dict(os.environ)
     env["XLA_FLAGS"] = merged_xla_flags(devices, env)
@@ -58,9 +70,15 @@ def _reexec(smoke: bool, json_path: str, devices: int) -> int:
         os.path.dirname(os.path.abspath(__file__)))))
     env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
     cmd = [sys.executable, "-m", "repro.core.analysis",
-           "--json", os.path.abspath(json_path), "--devices", str(devices)]
-    if smoke:
+           "--json", os.path.abspath(args.json), "--devices", str(devices)]
+    if args.smoke:
         cmd.append("--smoke")
+    if args.tuning_cache:
+        cmd += ["--tuning-cache", os.path.abspath(args.tuning_cache)]
+    if args.telemetry:
+        cmd += ["--telemetry", os.path.abspath(args.telemetry)]
+    if args.drift_band is not None:
+        cmd += ["--drift-band", str(args.drift_band)]
     return subprocess.call(cmd, env=env)
 
 
@@ -75,6 +93,17 @@ def main(argv=None) -> None:
                     help=f"report path (default {ARTIFACT})")
     ap.add_argument("--devices", type=int, default=DEFAULT_DEVICES,
                     help="forced host-device count for the sharded cells")
+    ap.add_argument("--tuning-cache", default=None,
+                    help="tuning cache JSON joined by the drift gate "
+                         "(default: the process cache, $REPRO_TUNING_CACHE "
+                         "or ~/.cache/repro/tuning.json)")
+    ap.add_argument("--telemetry", default=None,
+                    help="telemetry JSONL trace whose "
+                         "registry.time_backend.result events feed the "
+                         "drift gate")
+    ap.add_argument("--drift-band", type=float, default=None,
+                    help="drift tolerance band (x the calibrated median; "
+                         "default 8.0)")
     args = ap.parse_args(argv)
 
     if not args.smoke and not os.environ.get(_CHILD_ENV):
@@ -82,8 +111,8 @@ def main(argv=None) -> None:
         if jax.device_count() < 2:
             # jax reads XLA_FLAGS once at backend init — too late for this
             # process, so the full audit forks a multi-device child
-            raise SystemExit(_reexec(args.smoke, args.json, args.devices))
-    raise SystemExit(_audit_here(args.smoke, args.json))
+            raise SystemExit(_reexec(args, args.devices))
+    raise SystemExit(_audit_here(args))
 
 
 if __name__ == "__main__":

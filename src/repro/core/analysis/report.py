@@ -1,14 +1,22 @@
-"""Finding / skip records and the ``repro.analysis/v1`` report assembly."""
+"""Finding / skip records and the ``repro.analysis/v2`` report assembly.
+
+v2 (PR 9) adds the static performance auditor: three new passes
+(``traffic``, ``roofline``, ``drift``), a per-cell ``cost`` section
+(traffic census + roofline verdict + per-tunable-point predictions), the
+audited ``chip`` name, and a ``drift`` section with the measurement joins
+and the host calibration factor.  v1 consumers that only read
+``findings``/``waived``/``skips``/``summary`` keep working unchanged."""
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Any, Dict, List, Optional, Tuple
 
-SCHEMA = "repro.analysis/v1"
+SCHEMA = "repro.analysis/v2"
 
-#: the four static passes, in report order
-PASSES = ("dtypes", "grid", "collectives", "recompile")
+#: the seven static passes, in report order (4 correctness + 3 performance)
+PASSES = ("dtypes", "grid", "collectives", "recompile",
+          "traffic", "roofline", "drift")
 
 SEVERITIES = ("error", "warning")
 
@@ -53,6 +61,9 @@ class CellResult:
     findings: List[Finding] = dataclasses.field(default_factory=list)
     skips: List[SkipRecord] = dataclasses.field(default_factory=list)
     passes_run: Tuple[str, ...] = ()
+    #: the performance auditor's census/verdict for this cell (v2), keyed
+    #: ``{"chip", "traffic", "verdict", "points", "best_predicted"}``
+    cost: Optional[Dict[str, Any]] = None
 
     @property
     def errors(self) -> List[Finding]:
@@ -80,25 +91,43 @@ def _dedup_source_level(findings: List[Finding]) -> List[Finding]:
 
 
 def assemble_report(cells: List[CellResult], *, device_count: int,
-                    smoke: bool) -> Dict[str, Any]:
-    """The ``repro.analysis/v1`` JSON document."""
-    findings = _dedup_source_level([f for c in cells for f in c.errors])
-    waived = _dedup_source_level([f for c in cells for f in c.waived])
+                    smoke: bool, chip: Optional[str] = None,
+                    drift: Optional[Tuple[List[Finding], Dict[str, Any]]]
+                    = None) -> Dict[str, Any]:
+    """The ``repro.analysis/v2`` JSON document.
+
+    ``drift`` is the registry-level pass-7 outcome — its findings merge
+    into the same findings/waived lists as the per-cell passes (so the CLI
+    exit code and ``benchmarks/run.py --only analysis`` gate on them for
+    free), and its join records land under the top-level ``drift`` key.
+    """
+    drift_findings, drift_summary = drift if drift is not None else ([], {})
+    all_errors = [f for c in cells for f in c.errors] \
+        + [f for f in drift_findings if not f.waived]
+    all_waived = [f for c in cells for f in c.waived] \
+        + [f for f in drift_findings if f.waived]
+    findings = _dedup_source_level(all_errors)
+    waived = _dedup_source_level(all_waived)
     skips = [s for c in cells for s in c.skips]
     return {
         "schema": SCHEMA,
         "smoke": bool(smoke),
         "device_count": int(device_count),
+        "chip": chip,
         "passes": list(PASSES),
         "matrix": [[c.kernel, c.backend] for c in cells],
         "findings": [f.to_json() for f in findings],
         "waived": [f.to_json() for f in waived],
         "skips": [s.to_json() for s in skips],
+        "cost": {f"{c.kernel}[{c.backend}]": c.cost
+                 for c in cells if c.cost is not None},
+        "drift": drift_summary,
         "summary": {
             "cells": len(cells),
             "audited": sum(1 for c in cells if c.passes_run),
             "findings": len(findings),
             "waived": len(waived),
             "skips": len(skips),
+            "drift_joined": drift_summary.get("joined", 0),
         },
     }

@@ -24,7 +24,7 @@ import re
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["HloCost", "analyze_hlo"]
+__all__ = ["HloCost", "analyze_hlo", "arithmetic_intensity"]
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")
@@ -72,17 +72,23 @@ def _operand_names(ins_line: str) -> List[str]:
     Depending on the XLA version the operand list is either bare names
     (`dot(%a, %b)`) or typed (`dot(f32[64,128]{1,0} %a, f32[...] %b)`); the
     latter breaks naive comma-splitting because shapes embed commas.  `%name`
-    tokens are unambiguous in both formats.
+    tokens are unambiguous in both formats.  The operand list is located
+    *after* the opcode — a tuple-shaped result (`(f32[..], f32[..]) fusion`)
+    puts an earlier paren group on the line that must not be mistaken for it.
     """
-    args = re.search(r"\(([^)]*)\)", ins_line)
-    if not args:
-        return []
-    names = _OPERAND_NAME.findall(args.group(1))
+    m = _INSTR.match(ins_line)
+    if m:
+        body = ins_line[m.end():].split(")", 1)[0]
+    else:
+        args = re.search(r"\(([^)]*)\)", ins_line)
+        if not args:
+            return []
+        body = args.group(1)
+    names = _OPERAND_NAME.findall(body)
     if names:
         return names
     # no '%' sigils at all (stripped dumps): fall back to comma-split words
-    return [a.strip().split()[-1] for a in args.group(1).split(",")
-            if a.strip()]
+    return [a.strip().split()[-1] for a in body.split(",") if a.strip()]
 
 
 def _shape_elems_bytes(shape_text: str) -> Tuple[int, int]:
@@ -328,6 +334,14 @@ class _Module:
 # named scopes whose HBM traffic a validated Pallas kernel eliminates
 # (models mark these with jax.named_scope; kernels/ hold the kernels)
 KERNEL_VMEM_SCOPES = ("attn_tile", "wkv_tile")
+
+
+def arithmetic_intensity(cost: HloCost) -> float:
+    """FLOP per HBM byte of an analyzed module (the roofline x-axis).
+
+    Guards the zero-traffic case (e.g. a module whose entry is a single
+    fused constant) so callers can compare AIs without special-casing."""
+    return cost.flops / max(cost.hbm_bytes, 1.0)
 
 
 def analyze_hlo(hlo_text: str,

@@ -146,6 +146,10 @@ class PortableKernel:
     #: backend name -> grid-coverage metadata (see ``declare_grid_contract``)
     grid_contracts: Dict[str, Dict[str, Any]] = dataclasses.field(
         default_factory=dict)
+    #: backend name -> static performance expectations (see
+    #: ``declare_roofline_contract``); audited by ``analysis.cost``
+    roofline_contracts: Dict[str, Dict[str, Any]] = dataclasses.field(
+        default_factory=dict)
 
     # ---- registration -------------------------------------------------
     def add_backend(self, name: str, fn: Callable[..., Any],
@@ -210,6 +214,35 @@ class PortableKernel:
 
     def grid_contract(self, backend: str) -> Dict[str, Any]:
         return self.grid_contracts.get(backend, {})
+
+    def declare_roofline_contract(
+            self, backends: Union[str, Sequence[str]], *,
+            bound: Optional[str] = None,
+            traffic_inflation_limit: Optional[float] = None) -> None:
+        """Pin the static performance auditor's expectations for a backend.
+
+        ``bound`` is the expected roofline verdict at the conformance-case
+        shape ("memory" | "compute" | "collective") — declare it only where
+        the verdict is platform-robust; the auditor flags a flip as a
+        regression.  ``traffic_inflation_limit`` overrides the default
+        modeled-traffic-over-compulsory-bytes limit for kernels whose halo
+        re-reads or accumulator revisits are by design.
+        """
+        if bound is not None and bound not in ("memory", "compute",
+                                               "collective"):
+            raise ValueError(f"unknown roofline bound {bound!r}")
+        contract: Dict[str, Any] = {}
+        if bound is not None:
+            contract["bound"] = bound
+        if traffic_inflation_limit is not None:
+            contract["traffic_inflation_limit"] = \
+                float(traffic_inflation_limit)
+        names = [backends] if isinstance(backends, str) else list(backends)
+        for n in names:
+            self.roofline_contracts[n] = contract
+
+    def roofline_contract(self, backend: str) -> Dict[str, Any]:
+        return self.roofline_contracts.get(backend, {})
 
     def backend(self, name: Optional[str] = None) -> Backend:
         if name is None:
@@ -319,10 +352,12 @@ class PortableKernel:
         Each call emits one ``registry.time_backend`` telemetry span tagged
         with (kernel, backend, params) — the per-measurement provenance the
         Eq.-4 table is built from — with per-iteration ``registry.measure``
-        child spans inside it.  All events fire at the driver level, outside
-        the measured regions' compiled code, and timing uses the same
-        ``perf_counter`` reads as before: telemetry off is bitwise the
-        status quo.
+        child spans inside it, plus one ``registry.time_backend.result``
+        instant carrying the shape signature and median seconds (the join
+        key the static auditor's drift gate re-traces predictions from).
+        All events fire at the driver level, outside the measured regions'
+        compiled code, and timing uses the same ``perf_counter`` reads as
+        before: telemetry off is bitwise the status quo.
         """
         fn = self._require_available(backend)
         params = {k: v for k, v in kwargs.items()
@@ -343,7 +378,21 @@ class PortableKernel:
                     jax.block_until_ready(out)
                     times.append(time.perf_counter() - t0)
         tel.counter("registry.time_backend.calls", proc="registry")
-        return float(np.median(times))
+        median_s = float(np.median(times))
+        if tel.enabled():
+            import json as _json
+
+            from repro.core import tuning as _tuning
+            base = {k: v for k, v in kwargs.items() if k not in params}
+            tel.instant(
+                "registry.time_backend.result", proc="registry",
+                kernel=self.name, backend=backend,
+                shape=_tuning.shape_signature(*args, **base),
+                params_json=_json.dumps(params, sort_keys=True, default=repr),
+                seconds=median_s, iters=iters,
+                devices=jax.device_count(),
+                platform=jax.devices()[0].platform)
+        return median_s
 
     def figure_of_merit(self, elapsed_s: float, *args: Any,
                         **kwargs: Any) -> Dict[str, float]:

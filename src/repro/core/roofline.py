@@ -20,8 +20,9 @@ from typing import Any, Dict, Mapping, Optional
 from repro.core.hlo_analysis import CollectiveStats, parse_collective_bytes
 from repro.core.hlo_cost import HloCost, analyze_hlo
 
-__all__ = ["ChipSpec", "TPU_V5E", "RooflineTerms", "roofline_from_compiled",
-           "model_flops"]
+__all__ = ["ChipSpec", "TPU_V5E", "NVIDIA_H100", "AMD_MI300A", "CPU_HOST",
+           "CHIP_SPECS", "detect_chip", "RooflineTerms",
+           "roofline_from_compiled", "model_flops"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +33,11 @@ class ChipSpec:
     ici_bw: float            # bytes/s per link
     hbm_bytes: float         # capacity
 
+    @property
+    def ridge(self) -> float:
+        """Arithmetic intensity (FLOP/byte) at the compute/memory knee."""
+        return self.peak_flops / self.hbm_bw
+
 
 TPU_V5E = ChipSpec(
     name="tpu-v5e",
@@ -40,6 +46,68 @@ TPU_V5E = ChipSpec(
     ici_bw=50e9,            # ~50 GB/s/link
     hbm_bytes=16 * 2 ** 30,
 )
+
+# The paper's two GPU targets (Table: H100 PCIe/SXM and MI300A APU).
+NVIDIA_H100 = ChipSpec(
+    name="nvidia-h100",
+    peak_flops=989e12,      # 989 TFLOP/s bf16 dense (SXM)
+    hbm_bw=3.35e12,         # HBM3
+    ici_bw=450e9,           # NVLink per direction
+    hbm_bytes=80 * 2 ** 30,
+)
+
+AMD_MI300A = ChipSpec(
+    name="amd-mi300a",
+    peak_flops=981e12,      # 980.6 TFLOP/s bf16
+    hbm_bw=5.3e12,          # unified HBM3
+    ici_bw=128e9,           # Infinity Fabric link
+    hbm_bytes=128 * 2 ** 30,
+)
+
+# Calibration floor for hosts without an accelerator (CI, laptops): a
+# vectorized server core-complex.  Verdicts on this spec are only used
+# relatively (the drift gate self-calibrates); the ridge (~16 FLOP/byte)
+# is deliberately in the same decade as the real chips so bound verdicts
+# transfer.
+CPU_HOST = ChipSpec(
+    name="cpu-host",
+    peak_flops=5e11,
+    hbm_bw=3e10,
+    ici_bw=1e10,
+    hbm_bytes=16 * 2 ** 30,
+)
+
+CHIP_SPECS: Dict[str, ChipSpec] = {
+    c.name: c for c in (TPU_V5E, NVIDIA_H100, AMD_MI300A, CPU_HOST)
+}
+
+
+def detect_chip(platform: Optional[str] = None,
+                device_kind: Optional[str] = None) -> ChipSpec:
+    """Map the local jax backend (or explicit platform/device_kind strings)
+    to the ChipSpec whose peaks the roofline verdict should name.
+
+    TPU hosts get the assignment's v5e spec, GPU hosts are split H100 vs
+    MI300A on the device-kind string, and everything else (the CPU CI
+    lane, forced host devices) falls back to ``CPU_HOST``.
+    """
+    if platform is None:
+        try:
+            import jax
+            dev = jax.devices()[0]
+            platform = dev.platform
+            device_kind = getattr(dev, "device_kind", "") or ""
+        except Exception:
+            return CPU_HOST
+    platform = (platform or "").lower()
+    kind = (device_kind or "").lower()
+    if platform == "tpu":
+        return TPU_V5E
+    if platform in ("gpu", "cuda", "rocm"):
+        if "mi300" in kind or "amd" in kind or platform == "rocm":
+            return AMD_MI300A
+        return NVIDIA_H100
+    return CPU_HOST
 
 
 @dataclasses.dataclass

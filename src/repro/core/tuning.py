@@ -23,9 +23,13 @@ spine:
 Grids past ``COORD_THRESHOLD`` points switch (under ``search="auto"``) to a
 budgeted coordinate descent: sweep one parameter at a time from a
 deterministic start, repeat until a full pass stops improving or the timing
-budget runs out.  Budgeted results are cached with a ``"coordinate"``
-provenance marker and are **never** served to a caller whose sweep would be
-exhaustive — a partial search must not masquerade as the tuned optimum.
+budget runs out.  ``search="model"`` goes further: the static cost model
+(``repro.core.analysis.cost``) ranks every valid point by predicted
+roofline time, points dominated on both modeled traffic and parallelism
+are pruned, and only the top-k candidates are timed.  Partial results
+(``"coordinate"``/``"model"``) are cached with their provenance marker and
+are **never** served to a caller whose sweep would be exhaustive — a
+partial search must not masquerade as the tuned optimum.
 
 Cache location: ``$REPRO_TUNING_CACHE`` if set, else
 ``~/.cache/repro/tuning.json``.  Schema v2
@@ -386,7 +390,16 @@ class TuningResult:
     swept: List[Tuple[Dict[str, Any], float]]  # every timed (point, seconds)
     cached: bool                      # True = served from the cache, no timing
     skipped: Optional[str] = None     # reason this backend was not tuned
-    search: str = "exhaustive"        # "exhaustive" | "coordinate"
+    search: str = "exhaustive"        # "exhaustive" | "coordinate" | "model"
+
+
+#: provenances of partial searches — cache hits carrying one of these are
+#: never served to a caller whose own sweep would be exhaustive
+PARTIAL_SEARCHES = ("coordinate", "model")
+
+#: distinct points the model-guided search times (the top-k of the ranked,
+#: dominance-pruned grid)
+MODEL_TOP_K = 4
 
 
 def _coordinate_descent(kernel, space, points, budget, time_point):
@@ -448,12 +461,16 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
     ``search`` picks the strategy: ``"exhaustive"`` times every valid
     point; ``"coordinate"`` runs a budgeted coordinate descent
     (``budget`` distinct points, default twice the summed per-parameter
-    grid lengths); ``"auto"`` (default) uses coordinate descent only when
-    the valid grid exceeds ``COORD_THRESHOLD`` points.  A budgeted result
-    is cached with ``search="coordinate"`` provenance and is never served
-    to a caller whose own sweep would be exhaustive.
+    grid lengths); ``"model"`` ranks the grid by the static cost model
+    (``repro.core.analysis.cost``), prunes points dominated on both
+    modeled traffic and parallelism, and times only the top
+    ``budget`` (default ``MODEL_TOP_K``) candidates; ``"auto"`` (default)
+    uses coordinate descent only when the valid grid exceeds
+    ``COORD_THRESHOLD`` points.  Partial results (coordinate/model) are
+    cached with their provenance and are never served to a caller whose
+    own sweep would be exhaustive.
     """
-    if search not in ("auto", "exhaustive", "coordinate"):
+    if search not in ("auto", "exhaustive", "coordinate", "model"):
         raise ValueError(f"unknown search mode {search!r}")
     b = kernel.backends.get(backend)
     if b is None:
@@ -479,16 +496,18 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
                             skipped="no tunable space declared")
 
     points = space.valid_points(*args, **kwargs)
+    model = search == "model"
     coordinate = (search == "coordinate"
                   or (search == "auto" and len(points) > COORD_THRESHOLD))
+    partial = coordinate or model
 
     if cache is not None:
         hit = cache.get(key)
         if hit is not None:
             hit_search = hit.get("search", "exhaustive")
-            # a budgeted (coordinate) entry must not satisfy an exhaustive
-            # request — fall through and run the full sweep instead
-            if not (hit_search == "coordinate" and not coordinate):
+            # a partial (coordinate/model) entry must not satisfy an
+            # exhaustive request — fall through and run the full sweep
+            if not (hit_search in PARTIAL_SEARCHES and not partial):
                 tel.counter("tuning.cache.hit", proc="tuning")
                 return TuningResult(
                     kernel=kernel.name, backend=backend,
@@ -497,11 +516,12 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
                     search=hit_search)
         tel.counter("tuning.cache.miss", proc="tuning")
 
-    # max_points is the smoke lane's hard work bound and applies to BOTH
+    # max_points is the smoke lane's hard work bound and applies to ALL
     # strategies: exhaustive sweeps drop the grid tail, coordinate descent
-    # caps its timing budget — and neither bounded result may persist
+    # and the model search cap their timing budgets — and no truncated
+    # exhaustive result may persist
     truncated = max_points is not None and len(points) > max_points
-    if truncated and not coordinate:
+    if truncated and not partial:
         points = points[:max_points]
     if not points:
         return TuningResult(
@@ -510,7 +530,7 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
             skipped="no valid tunable point for these inputs")
 
     swept: List[Tuple[Dict[str, Any], float]] = []
-    mode = "coordinate" if coordinate else "exhaustive"
+    mode = "model" if model else "coordinate" if coordinate else "exhaustive"
 
     def time_point(point):
         try:
@@ -527,7 +547,24 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
 
     with tel.span("tuning.tune", proc="tuning", kernel=kernel.name,
                   backend=backend, search=mode, points=len(points)):
-        if coordinate:
+        if model:
+            from repro.core.analysis import cost as _cost
+            ranked = _cost.rank_points(kernel, backend, points, args, kwargs)
+            keep = _cost.prune_dominated(ranked)
+            top_k = budget if budget is not None else MODEL_TOP_K
+            if max_points is not None:
+                top_k = min(top_k, max_points)
+            candidates = [r["params"] for r in keep[:max(1, top_k)]]
+            tel.instant("tuning.model_prior", proc="tuning",
+                        kernel=kernel.name, backend=backend,
+                        points=len(points), pruned=len(points) - len(keep),
+                        timed=len(candidates))
+            best_params, best_secs = None, float("inf")
+            for point in candidates:
+                secs = time_point(point)
+                if secs < best_secs:
+                    best_secs, best_params = secs, point
+        elif coordinate:
             if budget is None:
                 budget = 2 * sum(len(v) for v in space.params.values())
             if max_points is not None:
@@ -552,8 +589,8 @@ def tune(kernel: PortableKernel, *args: Any, backend: str,
                           cached=False, search=mode)
     # a truncated sweep (smoke lane) must not poison the cache: its key is
     # identical to the full run's, which would then inherit the partial
-    # search as if it were the tuned optimum; coordinate results persist,
-    # but carry their provenance so exhaustive callers re-search
+    # search as if it were the tuned optimum; coordinate/model results
+    # persist, but carry their provenance so exhaustive callers re-search
     if cache is not None and not truncated:
         cache.put(key, result.params, result.seconds, search=mode)
     return result

@@ -583,6 +583,9 @@ def register_sharded_backends() -> None:
         # ops are embarrassingly parallel
         k.declare_comm_contract(
             SHARD_BACKEND, ONE_PSUM if op == "dot" else NO_COLLECTIVES)
+        # sharding does not change the streaming AI: still memory-bound
+        # on every modeled chip
+        k.declare_roofline_contract(SHARD_BACKEND, bound="memory")
 
     k = get_kernel("minibude.fasten")
     if SHARD_BACKEND not in k.backends:
@@ -602,6 +605,8 @@ def register_sharded_backends() -> None:
                 _shard_ok(p["num_shards"], positions.shape[0], device_count))
         # per-device Fock partials accumulate with exactly one psum
         k.declare_comm_contract(SHARD_BACKEND, ONE_PSUM)
+        # O(N^4) work dwarfs the one Fock psum: compute-bound everywhere
+        k.declare_roofline_contract(SHARD_BACKEND, bound="compute")
 
 
 # importing the ops modules (not the package, to stay cycle-safe when

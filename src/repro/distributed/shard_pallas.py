@@ -425,6 +425,11 @@ def register_shard_pallas_backends() -> None:
                                         device_count))
         k.declare_comm_contract(PALLAS_SHARD_BACKEND,
                                 stencil_pallas_comm_contract)
+        # every shard re-reads its halo-padded slab once per local grid
+        # step and the tiny grids replicate operand planes, so the modeled
+        # traffic legitimately runs ~9-12x over the compulsory floor
+        k.declare_roofline_contract(PALLAS_SHARD_BACKEND,
+                                    traffic_inflation_limit=16.0)
 
     for op, fn in stream_shard_pallas_fns().items():
         k = get_kernel(f"babelstream.{op}")
@@ -446,6 +451,8 @@ def register_shard_pallas_backends() -> None:
             # a write race
             k.declare_grid_contract(PALLAS_SHARD_BACKEND,
                                     accumulator_outputs=(0,))
+        # streaming AI is shard-invariant: memory-bound on every chip
+        k.declare_roofline_contract(PALLAS_SHARD_BACKEND, bound="memory")
 
     k = get_kernel("minibude.fasten")
     if PALLAS_SHARD_BACKEND not in k.backends:
@@ -468,6 +475,11 @@ def register_shard_pallas_backends() -> None:
             constraint=lambda p, positions, *a, device_count=None, **kw:
                 hf_pallas_point_ok(p, positions.shape[0], device_count))
         k.declare_comm_contract(PALLAS_SHARD_BACKEND, ONE_PSUM)
+        # compute-bound everywhere; the conformance deck is tiny (608-byte
+        # compulsory floor) and every shard re-reads the replicated
+        # operands, so modeled traffic runs ~10-16x over the floor
+        k.declare_roofline_contract(PALLAS_SHARD_BACKEND, bound="compute",
+                                    traffic_inflation_limit=24.0)
 
 
 # importing the ops modules registers the base kernels (mirrors domain.py);

@@ -102,3 +102,7 @@ for _op in ("copy", "mul", "add", "triad", "dot"):
         # a declared sequential accumulator, not a write race
         _k.declare_grid_contract(("pallas", "pallas_interpret"),
                                  accumulator_outputs=(0,))
+    # streaming kernels by construction: O(1) flops per byte, memory-bound
+    # on every chip ridge the auditor models
+    _k.declare_roofline_contract(("xla", "pallas", "pallas_interpret"),
+                                 bound="memory")

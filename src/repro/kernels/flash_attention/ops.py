@@ -129,3 +129,7 @@ _kd.declare_tunables(
 # same online-softmax accumulator shape along the cache-axis grid
 _kd.declare_grid_contract(("pallas", "pallas_interpret"),
                           accumulator_outputs=(0,))
+# single-query decode re-reads the whole KV cache per token (AI ~1):
+# memory-bound on every modeled chip ridge
+_kd.declare_roofline_contract(("xla", "pallas", "pallas_interpret"),
+                              bound="memory")

@@ -51,3 +51,7 @@ _k.declare_tunables(
     i_tile=K.I_TILE_GRID,
     constraint=lambda p, positions, *a, **kw:
         positions.shape[0] % p["i_tile"] == 0)
+# O(N^4) integrals over O(N^2) operands: AI in the thousands, compute-bound
+# everywhere the auditor models
+_k.declare_roofline_contract(("xla", "pallas", "pallas_interpret"),
+                             bound="compute")

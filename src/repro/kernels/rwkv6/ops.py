@@ -44,3 +44,7 @@ _k.declare_tunables(
     ("pallas", "pallas_interpret"),
     chunk=(16, 32, 64),
     constraint=lambda p, r, *a, **kw: r.shape[2] % p["chunk"] == 0)
+# the xla scan streams state every step (AI ~8): memory-bound on every
+# modeled chip; the chunked pallas AI (~36) straddles the cpu-host ridge,
+# so only the xla cell pins a bound
+_k.declare_roofline_contract("xla", bound="memory")

@@ -45,3 +45,7 @@ _k.declare_tunables(
     ("pallas", "pallas_interpret"),
     by=K.BY_GRID,
     constraint=lambda p, u, *a, **kw: u.shape[1] % p["by"] == 0)
+# AI ~= 13/24 flop/byte at fp32: memory-bound on every chip ridge the
+# auditor models (cpu-host 16.7 through H100 ~295)
+_k.declare_roofline_contract(("xla", "pallas", "pallas_interpret"),
+                             bound="memory")

@@ -1,0 +1,131 @@
+"""Edge cases of the compiled-HLO cost parsers (PR 9 satellite).
+
+``test_core.py`` covers the happy paths (trip counts, XLA cross-check);
+this file pins the parser corners the registry walk depends on: typed
+operand lists, tuple-output fusions, modules without collectives, async
+``-start``/``-done`` collective pairs, and the public
+``arithmetic_intensity`` helper."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hlo_analysis import parse_collective_bytes
+from repro.core.hlo_cost import analyze_hlo, arithmetic_intensity
+
+# hand-written HLO in the two operand styles XLA emits: typed
+# (`f32[64]{0} %a`) and bare (`%a`) — both must parse identically
+_TYPED_OPERANDS = """
+HloModule m
+
+ENTRY %main (a: f32[64,32], b: f32[32,16]) -> f32[64,16] {
+  %a = f32[64,32]{1,0} parameter(0)
+  %b = f32[32,16]{1,0} parameter(1)
+  ROOT %d = f32[64,16]{1,0} dot(f32[64,32]{1,0} %a, f32[32,16]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+_BARE_OPERANDS = """
+HloModule m
+
+ENTRY %main (a: f32[64,32], b: f32[32,16]) -> f32[64,16] {
+  %a = f32[64,32]{1,0} parameter(0)
+  %b = f32[32,16]{1,0} parameter(1)
+  ROOT %d = f32[64,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+_TUPLE_FUSION = """
+HloModule m
+
+%fused (p0: f32[128]) -> (f32[128], f32[128]) {
+  %p0 = f32[128]{0} parameter(0)
+  %e = f32[128]{0} exponential(%p0)
+  %t = f32[128]{0} tanh(%p0)
+  ROOT %tup = (f32[128]{0}, f32[128]{0}) tuple(%e, %t)
+}
+
+ENTRY %main (a: f32[128]) -> (f32[128], f32[128]) {
+  %a = f32[128]{0} parameter(0)
+  ROOT %f = (f32[128]{0}, f32[128]{0}) fusion(%a), kind=kLoop, calls=%fused
+}
+"""
+
+_ASYNC_COLLECTIVES = """
+HloModule m
+
+ENTRY %main (p: f32[128]) -> f32[256] {
+  %p = f32[128]{0} parameter(0)
+  %ags = f32[256]{0} all-gather-start(%p), replica_groups={}
+  %agd = f32[256]{0} all-gather-done(%ags)
+  %rs = f32[64]{0} reduce-scatter(%p), replica_groups={}, to_apply=%sum
+  ROOT %out = f32[256]{0} copy(%agd)
+}
+"""
+
+
+def test_dot_flops_typed_and_bare_operands():
+    want = 2.0 * 64 * 16 * 32
+    assert analyze_hlo(_TYPED_OPERANDS).flops == want
+    assert analyze_hlo(_BARE_OPERANDS).flops == want
+
+
+def test_tuple_output_fusion():
+    cost = analyze_hlo(_TUPLE_FUSION)
+    # both fused elementwise ops count, the tuple glue does not
+    assert cost.flops == 2 * 128
+    assert cost.transcendentals == 2 * 128
+    # HBM traffic at the fusion boundary: operand + tuple result
+    assert cost.hbm_bytes == (128 + 2 * 128) * 4
+
+
+def test_zero_collective_module():
+    cost = analyze_hlo(_TYPED_OPERANDS)
+    assert cost.collective_bytes == 0.0
+    assert cost.collective_bytes_by_kind == {}
+    assert cost.collective_count_by_kind == {}
+    stats = parse_collective_bytes(_TYPED_OPERANDS)
+    assert stats.bytes_by_kind == {}
+    assert stats.count_by_kind == {}
+
+
+def test_async_start_done_counted_once():
+    stats = parse_collective_bytes(_ASYNC_COLLECTIVES)
+    # -start carries the payload, -done must not double it
+    assert stats.count_by_kind["all-gather"] == 1
+    assert stats.bytes_by_kind["all-gather"] == 256 * 4
+    assert stats.count_by_kind["reduce-scatter"] == 1
+    assert stats.bytes_by_kind["reduce-scatter"] == 64 * 4
+
+    cost = analyze_hlo(_ASYNC_COLLECTIVES)
+    assert cost.collective_count_by_kind["all-gather"] == 1
+    assert cost.collective_bytes_by_kind["all-gather"] == 256 * 4
+
+
+def test_no_entry_raises():
+    with pytest.raises(ValueError, match="no ENTRY"):
+        analyze_hlo("%orphan (p: f32[2]) -> f32[2] {\n}")
+
+
+def test_arithmetic_intensity_helper():
+    cost = analyze_hlo(_TYPED_OPERANDS)
+    assert arithmetic_intensity(cost) == pytest.approx(
+        cost.flops / cost.hbm_bytes)
+    # zero-traffic guard: never divides by zero
+    empty = analyze_hlo("ENTRY %main (p: f32[2]) -> f32[2] {\n"
+                        "  ROOT %p = f32[2]{0} parameter(0)\n}")
+    assert empty.hbm_bytes == 0.0
+    assert arithmetic_intensity(empty) == 0.0
+
+
+def test_compiled_roundtrip_has_positive_ai():
+    """A real compiled module flows through both lanes coherently."""
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    c = jax.jit(lambda x, y: jnp.tanh(x @ y)).lower(a, b).compile()
+    cost = analyze_hlo(c.as_text())
+    assert cost.flops >= 2 * 128 * 64 * 256
+    assert cost.hbm_bytes > 0
+    assert arithmetic_intensity(cost) > 0

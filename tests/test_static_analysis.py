@@ -395,10 +395,10 @@ def test_conformance_skip_carries_reason():
 # report schema
 # ---------------------------------------------------------------------------
 def test_report_schema_and_waiver_visibility():
-    """Smoke report: schema v1, matrix == derived smoke matrix, and the
+    """Smoke report: schema v2, matrix == derived smoke matrix, and the
     three intentional registry waivers stay visible (never silent)."""
     report = analysis.audit_registry(smoke=True)
-    assert report["schema"] == "repro.analysis/v1"
+    assert report["schema"] == "repro.analysis/v2"
     assert report["passes"] == list(analysis.PASSES)
     assert sorted(map(tuple, report["matrix"])) == sorted(SMOKE_PAIRS)
     assert report["summary"]["findings"] == 0
