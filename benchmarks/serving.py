@@ -1,39 +1,41 @@
-"""Serving-engine benchmark: throughput + SLO latency, per attention backend.
+"""Serving-engine SLO benchmark: Poisson rate sweep x cache layout x backend.
 
-Drives the fixed-shape continuous-batching engine with a Poisson-ish
-synthetic arrival trace (repro/serving/trace.py) on a smoke-size model,
-once per attention backend — the plain-XLA oracle first (the before), then
-the Pallas registry path (compiled on TPU, interpret elsewhere — the
-after).  Each backend emits one row:
+Drives the fixed-shape continuous-batching engine (v2) with Poisson-ish
+synthetic arrival traces (repro/serving/trace.py) on a smoke-size model.
+The sweep has three dimensions:
 
-    serving[<backend>],<us_per_decode_step>,<tok/s + TTFT/latency/ITL
-    p50/p95/p99 + attn dispatch provenance>
+  * attention backend — the plain-XLA oracle first (the before), then the
+    Pallas registry path (compiled on TPU, interpret elsewhere — the after);
+  * ``cache_layout`` — ``contiguous`` (one (num_slots, cache_len) KV row
+    per slot) vs ``paged`` (shared block pool + per-slot block tables);
+  * arrival rate — each (backend, layout) engine serves the SAME request
+    trace at several requests-per-second rates, so the row set shows how
+    TTFT/ITL percentiles degrade as load approaches saturation.
 
-The dispatch provenance comes from ``models/attention.dispatch_log()``,
-captured at trace time while the engine compiles its two programs: which
-registry backend each program actually dispatched to and whether its block
-sizes came from the tuning cache (``exhaustive``/``coordinate``) or the
-declared defaults (``miss-default``).
+One engine per (backend, layout) is compiled once — a warmup trace hits
+every rung of the prefill bucket ladder plus the decode program, so the
+compile count is bounded at ``len(PREFILL_BUCKETS) + 1`` per engine and the
+timed runs must not retrace (the row is annotated `RETRACED` if one does;
+``jax_compile_events_timed`` > 0 is the same signal machine-side).  Each
+(backend, layout, rate) cell emits one row:
 
-Since PR 8 the whole run records through ``repro.core.telemetry``: every
-request's lifecycle (enqueue -> slot-assign -> prefill span -> first-token
--> per-step decode spans -> finish), queue-depth/slot-occupancy gauges,
-attention dispatch events, and — via the ``jax.monitoring`` bridge — an XLA
-compile-event counter per row, the runtime twin of the static auditor's
-``recompile`` pass.  The trace is exported next to the artifact as a JSONL
-event log (``BENCH_serving_trace.jsonl`` — feed it to ``python -m
-repro.core.telemetry summarize``) and a Chrome/Perfetto-loadable
-``BENCH_serving_trace.json``.
+    serving[<backend>/<layout>@<rate>rps],<us_per_decode_step>,<tok/s +
+    TTFT/latency/ITL p50/p95/p99 + attn dispatch provenance>
 
-A small warmup trace triggers the two compiles (one prefill shape, one
-decode shape) before timing; the measured run must not retrace — the row is
-annotated `RETRACED` if it does, since that invalidates the timing (the
-``jax_compile_events`` column counts the expected warmup compiles; extra
-compiles during the timed run are the recompile-storm signal).  A
-machine-readable artifact is written to ``BENCH_serving.json`` (schema
-``repro.serving/v3``; v2 lacked the p99/inter-token-latency SLO columns,
-the compile counter, and the telemetry block; v1 was the single pre-PR-6
-CSV row).
+A row whose trace does not fully drain FAILS the benchmark (RuntimeError):
+``latency_summary`` reports ``submitted``/``unfinished`` precisely so
+half-served traces cannot masquerade as clean SLO percentiles.
+
+Since PR 8 the whole run records through ``repro.core.telemetry``: request
+lifecycles, queue-depth/slot-occupancy gauges, attention dispatch events,
+and — via the ``jax.monitoring`` bridge — an XLA compile-event counter per
+row.  The trace is exported next to the artifact as
+``BENCH_serving_trace.jsonl`` (feed to ``python -m repro.core.telemetry
+summarize``) and a Chrome/Perfetto-loadable ``BENCH_serving_trace.json``.
+
+A machine-readable artifact is written to ``BENCH_serving.json`` (schema
+``repro.serving/v4``; v3 had a single rate and a single cache layout and no
+drain accounting; v2 lacked the SLO columns; v1 was one CSV row).
 """
 
 from __future__ import annotations
@@ -43,6 +45,7 @@ import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config
@@ -51,16 +54,19 @@ from repro.core.portable import on_tpu
 from repro.core.telemetry.jaxmon import COMPILE_COUNTER
 from repro.models import attention as A
 from repro.models import transformer as T
-from repro.serving import ServingEngine, latency_summary, synthetic_trace
+from repro.serving import (Request, ServingEngine, latency_summary,
+                           synthetic_trace)
 
 ARCH = "granite-3-8b"
 NUM_SLOTS = 4
 CACHE_LEN = 64
-PREFILL_LEN = 16
-RATE_RPS = 50.0
+PREFILL_BUCKETS = (8, 16)
+BLOCK_SIZE = 8
 MAX_NEW = 16
+RATES_RPS = (10.0, 50.0, 200.0)
+CACHE_LAYOUTS = ("contiguous", "paged")
 ARTIFACT = "BENCH_serving.json"
-SCHEMA = "repro.serving/v3"
+SCHEMA = "repro.serving/v4"
 
 
 def _prov(log: Dict[str, Dict[str, Any]], kind: str) -> str:
@@ -81,28 +87,39 @@ def _ms(lat: Dict[str, float], key: str) -> Optional[float]:
     return v * 1e3 if v is not None else None
 
 
-def _one_backend(params, cfg, backend: str, n_requests: int
-                 ) -> Tuple[Dict[str, Any], List[Dict[str, Any]]]:
-    A.reset_dispatch_log()
-    compiles_before = _compile_count()
-    eng = ServingEngine(params, cfg, num_slots=NUM_SLOTS,
-                        cache_len=CACHE_LEN, prefill_len=PREFILL_LEN,
-                        attn_backend=backend)
+def _warmup_trace(cfg) -> List[Request]:
+    """One request per ladder bucket (exact-fit prompts), so every prefill
+    shape AND the decode shape compile before anything is timed."""
+    rng = np.random.default_rng(7)
+    return [
+        Request(uid=10_000 + i,
+                prompt=rng.integers(2, cfg.vocab_size, b).astype(np.int32),
+                max_new_tokens=4, arrival_time=0.0)
+        for i, b in enumerate(sorted(PREFILL_BUCKETS))]
 
-    warm = synthetic_trace(NUM_SLOTS, vocab_size=cfg.vocab_size, rate=1e6,
-                           max_prompt=PREFILL_LEN, max_new_tokens=4,
-                           seed=7, uid_base=10_000)
-    eng.run(warm)
-    # both programs are compiled now; the dispatch log holds what each
-    # traced — snapshot before the timed run (which must not retrace)
-    log = A.dispatch_log()
+
+def _build_engine(params, cfg, backend: str, layout: str) -> ServingEngine:
+    kwargs: Dict[str, Any] = {}
+    if layout == "paged":
+        kwargs["block_size"] = BLOCK_SIZE
+    return ServingEngine(params, cfg, num_slots=NUM_SLOTS,
+                         cache_len=CACHE_LEN,
+                         prefill_buckets=PREFILL_BUCKETS,
+                         attn_backend=backend, cache_layout=layout, **kwargs)
+
+
+def _one_rate(eng: ServingEngine, cfg, backend: str, layout: str,
+              rate: float, n_requests: int, dispatch_log,
+              ) -> Tuple[Dict[str, Any], List[Dict[str, Any]]]:
+    """One timed row: the warmed (backend, layout) engine serves the trace
+    at `rate` requests/second."""
+    compiles_before = _compile_count()
     traces_before = (eng.stats["prefill_traces"], eng.stats["decode_traces"])
     steps_before = eng.stats["decode_steps"]
     toks_before = eng.stats["tokens_generated"]
-    compiles_warm = _compile_count()
 
     trace = synthetic_trace(n_requests, vocab_size=cfg.vocab_size,
-                            rate=RATE_RPS, max_prompt=PREFILL_LEN,
+                            rate=rate, max_prompt=max(PREFILL_BUCKETS),
                             max_new_tokens=MAX_NEW, seed=1)
     t0 = time.perf_counter()
     done = eng.run(trace)
@@ -111,18 +128,25 @@ def _one_backend(params, cfg, backend: str, n_requests: int
 
     steps = eng.stats["decode_steps"] - steps_before
     toks = eng.stats["tokens_generated"] - toks_before
-    lat = latency_summary(done)
+    del done  # the engine mutates the trace's Request objects in place —
+    # summarizing the full submitted trace is what makes unfinished visible
+    lat = latency_summary(trace)
+    if lat["unfinished"] > 0:
+        raise RuntimeError(
+            f"serving[{backend}/{layout}@{rate:g}rps]: trace did not drain "
+            f"({lat['unfinished']}/{lat['submitted']} requests unfinished) "
+            f"— SLO percentiles would be meaningless")
     retraced = (eng.stats["prefill_traces"],
                 eng.stats["decode_traces"]) != traces_before
 
     # this row's telemetry: drain the ring so per-row events never evict
-    # each other across backends, summarize the spans, count compiles
+    # each other across rows, summarize the spans, count compiles
     rec = tel.recorder()
     row_events = rec.drain() if rec is not None else []
     row_tel = {
         "spans": tel.summarize_events(row_events),
         "jax_compile_events": compiles_after - compiles_before,
-        "jax_compile_events_timed": compiles_after - compiles_warm,
+        "jax_compile_events_timed": compiles_after - compiles_before,
     }
 
     def fmt(key):
@@ -136,14 +160,17 @@ def _one_backend(params, cfg, backend: str, n_requests: int
                f"p95 {fmt('p95_itl_s')} p99 {fmt('p99_itl_s')} ms "
                f"lat p50 {fmt('p50_latency_s')} "
                f"p95 {fmt('p95_latency_s')} p99 {fmt('p99_latency_s')} ms "
-               f"({n_requests} reqs @ {RATE_RPS:.0f} rps "
-               f"slots={NUM_SLOTS}) "
+               f"({n_requests} reqs @ {rate:g} rps slots={NUM_SLOTS}) "
                f"compiles={row_tel['jax_compile_events']:.0f} "
-               f"{_prov(log, 'prefill')} {_prov(log, 'decode')}"
+               f"{_prov(dispatch_log, 'prefill')} "
+               f"{_prov(dispatch_log, 'decode')}"
                + (" RETRACED" if retraced else ""))
-    emit(f"serving[{backend}]", wall / max(steps, 1), derived)
+    emit(f"serving[{backend}/{layout}@{rate:g}rps]",
+         wall / max(steps, 1), derived)
     row = {
         "backend": backend,
+        "cache_layout": layout,
+        "rate_rps": rate,
         "resolved": dict(eng.attn_backends),
         "tok_s": toks / wall,
         "us_per_decode_step": wall / max(steps, 1) * 1e6,
@@ -157,12 +184,55 @@ def _one_backend(params, cfg, backend: str, n_requests: int
         "latency_p95_ms": _ms(lat, "p95_latency_s"),
         "latency_p99_ms": _ms(lat, "p99_latency_s"),
         "requests": n_requests,
+        "submitted": lat["submitted"],
+        "unfinished": lat["unfinished"],
         "retraced": retraced,
         "jax_compile_events": row_tel["jax_compile_events"],
         "telemetry": row_tel,
-        "dispatch": log,
+        "dispatch": dispatch_log,
     }
     return row, row_events
+
+
+def _one_engine(params, cfg, backend: str, layout: str, n_requests: int,
+                ) -> Tuple[List[Dict[str, Any]], List[Dict[str, Any]],
+                           Dict[str, Any]]:
+    """Warm one (backend, layout) engine through the whole bucket ladder,
+    then serve the rate sweep on it."""
+    A.reset_dispatch_log()
+    compiles_before = _compile_count()
+    eng = _build_engine(params, cfg, backend, layout)
+    eng.run(_warmup_trace(cfg))
+    log = A.dispatch_log()
+    warm_compiles = _compile_count() - compiles_before
+    # the bounded-compile contract: one prefill program per ladder rung,
+    # one decode program — never a shape per prompt length
+    if eng.stats["prefill_traces"] > len(PREFILL_BUCKETS):
+        raise RuntimeError(
+            f"serving[{backend}/{layout}]: {eng.stats['prefill_traces']} "
+            f"prefill traces for a {len(PREFILL_BUCKETS)}-bucket ladder")
+    if eng.stats["decode_traces"] != 1:
+        raise RuntimeError(
+            f"serving[{backend}/{layout}]: expected exactly one decode "
+            f"trace, got {eng.stats['decode_traces']}")
+    rec = tel.recorder()
+    events = rec.drain() if rec is not None else []   # warmup events
+
+    rows = []
+    for rate in RATES_RPS:
+        row, row_events = _one_rate(eng, cfg, backend, layout, rate,
+                                    n_requests, log)
+        row["warmup_jax_compile_events"] = warm_compiles
+        rows.append(row)
+        events.extend(row_events)
+    engine_meta = {
+        "backend": backend,
+        "cache_layout": layout,
+        "prefill_traces": eng.stats["prefill_traces"],
+        "decode_traces": eng.stats["decode_traces"],
+        "warmup_jax_compile_events": warm_compiles,
+    }
+    return rows, events, engine_meta
 
 
 def run(smoke: bool = False, json_path: str = ARTIFACT) -> Dict[str, Any]:
@@ -181,14 +251,18 @@ def run(smoke: bool = False, json_path: str = ARTIFACT) -> Dict[str, Any]:
         # kernels (compiled on TPU, interpret mode on a CPU host — relative
         # numbers only there, see benchmarks/common.py)
         backends = ["xla", "pallas" if on_tpu() else "pallas_interpret"]
-        n_requests = 8 if smoke else 24
+        n_requests = 5 if smoke else 16
 
-        rows = []
+        rows: List[Dict[str, Any]] = []
+        engines: List[Dict[str, Any]] = []
         events: List[Dict[str, Any]] = []
         for bk in backends:
-            row, row_events = _one_backend(params, cfg, bk, n_requests)
-            rows.append(row)
-            events.extend(row_events)
+            for layout in CACHE_LAYOUTS:
+                erows, eevents, emeta = _one_engine(params, cfg, bk, layout,
+                                                    n_requests)
+                rows.extend(erows)
+                events.extend(eevents)
+                engines.append(emeta)
 
         rec = tel.recorder()
         events.extend(rec.drain() if rec is not None else [])
@@ -212,12 +286,16 @@ def run(smoke: bool = False, json_path: str = ARTIFACT) -> Dict[str, Any]:
             "platform": jax.devices()[0].platform,
             "num_slots": NUM_SLOTS,
             "cache_len": CACHE_LEN,
-            "prefill_len": PREFILL_LEN,
+            "prefill_buckets": list(PREFILL_BUCKETS),
+            "block_size": BLOCK_SIZE,
+            "cache_layouts": list(CACHE_LAYOUTS),
+            "rates_rps": list(RATES_RPS),
             "jax_compile_events": snap.get("counters", {}).get(
                 COMPILE_COUNTER, 0.0),
             "telemetry": snap,
             "trace_jsonl": trace_jsonl,
             "trace_chrome": trace_chrome,
+            "engines": engines,
             "rows": rows,
         }
         with open(json_path, "w") as f:

@@ -1,0 +1,192 @@
+"""Paged KV-cache layout: block pool + block-table gather/scatter.
+
+The contiguous engine owns one ``(num_slots, cache_len)`` KV row per slot.
+This module implements the vLLM-style alternative: the KV store is a shared
+pool of ``(num_blocks, block_size)`` pages and each slot carries a *block
+table* — ``(num_slots, pages_per_slot)`` physical page ids, where
+``pages_per_slot = cache_len // block_size`` — mapping logical page ``j``
+(positions ``j*block_size .. (j+1)*block_size-1``) to its physical page.
+
+Because attention in this codebase is *purely position-masked* (cache
+``pos`` annotations, -1 = empty; ring order is arbitrary by contract), the
+paged layout composes with the existing compiled decode program by
+construction:
+
+  * ``gather_caches``   pool + tables -> a contiguous ``(num_slots,
+    cache_len)`` cache pytree, bit-identical to what the contiguous engine
+    would hold (unallocated table entries point at the sentinel page, whose
+    ``pos`` is always -1 and whose K/V are always zeros — exactly the
+    untouched tail of a contiguous row).
+  * ``scatter_prefill`` a freshly prefilled single-row cache, split into
+    pages and written to the request's allocated pages (all-empty tail
+    pages land on the sentinel, which keeps its invariant because they are
+    all-empty).
+  * ``scatter_decode``  after a decode step over the gathered view, the one
+    newly written cache entry per slot is copied back to
+    ``tables[slot, pos // block_size]`` at offset ``pos % block_size``
+    (inactive slots' tables point every entry at the trash page, so their
+    garbage writes never land in a mapped page).
+
+All three are pure jax functions traced inside the engine's compiled
+programs — the paged engine still compiles exactly one decode shape.
+
+Sliding-window layers keep their per-slot ``(num_slots, window)`` ring
+buffers (a ring is already bounded and dense — paging it buys nothing);
+only full-``cache_len`` caches page.  ``repro.models.transformer.
+cache_seq_lens`` is the source of truth for which is which.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import cache_seq_lens, init_caches
+from repro.serving.slots import RESERVED_BLOCKS, SENTINEL_BLOCK, TRASH_BLOCK
+
+__all__ = ["RESERVED_BLOCKS", "SENTINEL_BLOCK", "TRASH_BLOCK",
+           "check_paged_geometry", "init_paged_caches", "gather_caches",
+           "scatter_prefill", "scatter_decode"]
+
+
+def check_paged_geometry(cache_len: int, block_size: int,
+                         num_blocks: int) -> int:
+    """Validate the paged layout and return ``pages_per_slot``."""
+    if block_size < 1:
+        raise ValueError("block_size must be >= 1")
+    if cache_len % block_size:
+        raise ValueError(
+            f"cache_len {cache_len} must be a multiple of block_size "
+            f"{block_size} (logical pages tile the cache exactly)")
+    if num_blocks <= RESERVED_BLOCKS:
+        raise ValueError(
+            f"num_blocks {num_blocks} leaves no allocatable pages "
+            f"({RESERVED_BLOCKS} reserved)")
+    return cache_len // block_size
+
+
+def _map_caches(caches: Any, fn: Callable[[Any, int, bool], Any],
+                cfg: ModelConfig, cache_len: int) -> Any:
+    """Apply ``fn(leaf, batch_axis, paged)`` over a cache pytree.
+
+    Engine caches hold only attention ``{"k","v","pos"}`` dicts (the engine
+    rejects rwkv/ssm/enc-dec archs): eager leaves are ``(batch, seq, ...)``
+    (batch axis 0), scan-segment leaves are stacked ``(n_layers, batch,
+    seq, ...)`` (batch axis 1).  ``paged`` is True when the entry's KV
+    length is the full ``cache_len`` (see ``cache_seq_lens``).
+    """
+    lens = cache_seq_lens(cfg, cache_len)
+    is_leaf = lambda x: isinstance(x, tuple)     # zipped (pool, new) pairs
+    out = {"eager": {}, "segments": []}
+    for idx, c in caches["eager"].items():
+        paged = lens["eager"][idx] == cache_len
+        out["eager"][idx] = jax.tree.map(
+            lambda leaf, p=paged: fn(leaf, 0, p), c, is_leaf=is_leaf)
+    for seg, c in zip(lens["segments"], caches["segments"]):
+        paged = seg == cache_len
+        out["segments"].append(jax.tree.map(
+            lambda leaf, p=paged: fn(leaf, 1, p), c, is_leaf=is_leaf))
+    return out
+
+
+def init_paged_caches(cfg: ModelConfig, *, num_slots: int, cache_len: int,
+                      block_size: int, num_blocks: int) -> Any:
+    """The pool pytree: paged leaves become ``(num_blocks, block_size,
+    ...)`` pages (``pos`` pages filled with -1 — the sentinel invariant
+    holds from step zero); window leaves keep their per-slot layout."""
+    check_paged_geometry(cache_len, block_size, num_blocks)
+
+    def one(leaf, axis, paged):
+        if not paged:
+            return leaf
+        shape = (leaf.shape[:axis] + (num_blocks, block_size)
+                 + leaf.shape[axis + 2:])
+        if leaf.dtype == jnp.int32:          # the pos annotations
+            return jnp.full(shape, -1, jnp.int32)
+        return jnp.zeros(shape, leaf.dtype)
+
+    return _map_caches(init_caches(cfg, num_slots, cache_len), one, cfg,
+                       cache_len)
+
+
+def gather_caches(pool: Any, tables: jnp.ndarray, cfg: ModelConfig, *,
+                  num_slots: int, cache_len: int, block_size: int) -> Any:
+    """pool + ``(num_slots, pages_per_slot)`` tables -> contiguous caches."""
+    flat = tables.reshape(-1)                # (num_slots * pages,)
+
+    def one(leaf, axis, paged):
+        if not paged:
+            return leaf
+        g = jnp.take(leaf, flat, axis=axis)  # (.., S*P, bs, ..)
+        shape = (leaf.shape[:axis] + (num_slots, cache_len)
+                 + leaf.shape[axis + 2:])
+        return g.reshape(shape)
+
+    return _map_caches(pool, one, cfg, cache_len)
+
+
+def scatter_prefill(pool: Any, small: Any, table_row: jnp.ndarray,
+                    slot, cfg: ModelConfig, *, cache_len: int,
+                    block_size: int) -> Any:
+    """Insert a batch=1 prefilled cache into the pool at ``table_row``.
+
+    ``table_row`` is ``(pages_per_slot,)`` physical ids — the request's
+    allocated pages followed by SENTINEL_BLOCK entries for the unallocated
+    tail.  The whole row is paged and written: allocated pages get the
+    prompt's K/V/pos, sentinel entries receive only all-empty pages
+    (``pos == -1``, zero K/V — the fresh cache's untouched tail), which is
+    what the sentinel already holds.  Window leaves insert at ``slot``
+    like the contiguous engine.
+    """
+    pages = cache_len // block_size
+
+    def one(args, axis, paged):
+        big, sm = args
+        if not paged:
+            return jax.lax.dynamic_update_slice_in_dim(
+                big, sm.astype(big.dtype), slot, axis)
+        # (.., 1, cache_len, ..) -> (.., pages, block_size, ..)
+        shape = (sm.shape[:axis] + (pages, block_size)
+                 + sm.shape[axis + 2:])
+        paged_sm = sm.reshape(shape).astype(big.dtype)
+        if axis == 0:
+            return big.at[table_row].set(paged_sm)
+        return big.at[:, table_row].set(paged_sm)
+
+    zipped = jax.tree.map(lambda b, s: (b, s), pool, small)
+    return _map_caches(zipped, one, cfg, cache_len)
+
+
+def scatter_decode(pool: Any, new_contig: Any, positions: jnp.ndarray,
+                   tables: jnp.ndarray, cfg: ModelConfig, *,
+                   cache_len: int, block_size: int) -> Any:
+    """Copy each slot's newly written cache entry back into its page.
+
+    ``positions`` is ``(num_slots,)`` — the absolute position each slot's
+    decode step just wrote (its input token's position).  Active slots hit
+    a page they own by the reservation invariant; inactive slots hit the
+    trash page via their all-TRASH table row.  Window leaves were updated
+    in place by the decode step and replace the pool leaf directly.
+    """
+    page = positions // block_size                    # (num_slots,)
+    off = positions % block_size
+    blk = jnp.take_along_axis(tables, page[:, None], axis=1)[:, 0]
+
+    def one(args, axis, paged):
+        big, new = args
+        if not paged:
+            return new
+        # entry written this step: new[.., slot, pos, ..] per slot
+        idx = positions.reshape((1,) * axis + (-1, 1)
+                                + (1,) * (new.ndim - axis - 2))
+        ent = jnp.take_along_axis(new, idx, axis=axis + 1)
+        ent = jnp.squeeze(ent, axis=axis + 1).astype(big.dtype)
+        if axis == 0:
+            return big.at[blk, off].set(ent)
+        return big.at[:, blk, off].set(ent)
+
+    zipped = jax.tree.map(lambda b, n: (b, n), pool, new_contig)
+    return _map_caches(zipped, one, cfg, cache_len)

@@ -40,12 +40,22 @@ def latency_summary(requests: Sequence[Request]) -> Dict[str, float]:
     per-token timestamps — e.g. hand-built test fixtures — contribute no
     gaps, and the ``itl`` keys are omitted when no request has any).
 
+    Unfinished requests are excluded from the percentiles but NOT hidden:
+    ``submitted`` counts every request handed in and ``unfinished`` the ones
+    that never completed, so a half-drained trace can't masquerade as a
+    clean SLO report (the serving benchmark fails any row with
+    ``unfinished > 0``).
+
     A trace where nothing finished returns the explicit empty summary
-    ``{"requests": 0}`` instead of crashing ``np.percentile`` on an empty
+    (``requests == 0``) instead of crashing ``np.percentile`` on an empty
     list.
     """
     done = [r for r in requests if r.finished]
-    out: Dict[str, float] = {"requests": len(done)}
+    out: Dict[str, float] = {
+        "requests": len(done),
+        "submitted": len(requests),
+        "unfinished": len(requests) - len(done),
+    }
     if not done:
         return out
     lats = np.asarray([r.latency() for r in done])

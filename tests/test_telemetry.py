@@ -249,10 +249,12 @@ def test_dispatch_flows_into_telemetry(telem):
 # serving SLO percentiles (trace.py satellite)
 # --------------------------------------------------------------------------
 def test_latency_summary_empty_trace_is_explicit():
-    assert latency_summary([]) == {"requests": 0}
-    # submitted-but-never-finished requests count as an empty summary too
+    assert latency_summary([]) == {"requests": 0, "submitted": 0,
+                                   "unfinished": 0}
+    # submitted-but-never-finished requests are counted, never hidden
     reqs = synthetic_trace(3, vocab_size=32)
-    assert latency_summary(reqs) == {"requests": 0}
+    assert latency_summary(reqs) == {"requests": 0, "submitted": 3,
+                                     "unfinished": 3}
 
 
 def test_latency_summary_p99_and_itl():
@@ -347,10 +349,10 @@ def test_engine_lifecycle_events_and_cli_smoke(params, tmp_path):
 
 
 # --------------------------------------------------------------------------
-# serving benchmark v3 drift check (slow lane; the --smoke CLI also covers)
+# serving benchmark v4 drift check (slow lane; the --smoke CLI also covers)
 # --------------------------------------------------------------------------
 @pytest.mark.slow
-def test_serving_benchmark_smoke_writes_v3_artifact(tmp_path, monkeypatch):
+def test_serving_benchmark_smoke_writes_v4_artifact(tmp_path, monkeypatch):
     from benchmarks import serving as bench
 
     monkeypatch.setenv("REPRO_TUNING_CACHE", str(tmp_path / "tuning.json"))
@@ -358,19 +360,40 @@ def test_serving_benchmark_smoke_writes_v3_artifact(tmp_path, monkeypatch):
     artifact = bench.run(smoke=True, json_path=json_path)
     on_disk = json.loads((tmp_path / "BENCH_serving.json").read_text())
 
-    assert on_disk["schema"] == "repro.serving/v3"
+    assert on_disk["schema"] == "repro.serving/v4"
     assert on_disk["jax_compile_events"] > 0      # the recompile counter
     assert on_disk["telemetry"]["counters"]
-    backends = [r["backend"] for r in on_disk["rows"]]
-    assert backends[0] == "xla" and len(backends) == 2
+    # the sweep: 2 backends x both cache layouts x a >=3-point rate ladder
+    assert len(on_disk["rates_rps"]) >= 3
+    backends = sorted({r["backend"] for r in on_disk["rows"]})
+    assert len(backends) == 2 and "xla" in backends
+    assert ({r["cache_layout"] for r in on_disk["rows"]}
+            == {"contiguous", "paged"})
+    cells = {(r["backend"], r["cache_layout"], r["rate_rps"])
+             for r in on_disk["rows"]}
+    assert len(cells) == 2 * 2 * len(on_disk["rates_rps"])
     for row in on_disk["rows"]:
         assert not row["retraced"]
+        # a row whose trace didn't drain would have raised inside run();
+        # the artifact still records the accounting
+        assert row["unfinished"] == 0
+        assert row["submitted"] == row["requests"]
         for col in ("ttft_p99_ms", "latency_p99_ms", "itl_p50_ms",
                     "itl_p95_ms", "itl_p99_ms", "jax_compile_events"):
             assert row[col] is not None and row[col] >= 0, col
+        # warmup walked the whole bucket ladder: timed runs never compile
+        assert row["telemetry"]["jax_compile_events_timed"] == 0
         assert row["telemetry"]["spans"]["serving.decode_step"]["count"] > 0
-    # the pallas row must dispatch through the registry, not fall back
-    assert on_disk["rows"][1]["dispatch"]["decode"]["backend"] != "xla"
+    # bounded-compile contract per engine: one prefill program per ladder
+    # rung at most, exactly one decode program
+    assert len(on_disk["engines"]) == 4
+    for e in on_disk["engines"]:
+        assert e["prefill_traces"] <= len(on_disk["prefill_buckets"])
+        assert e["decode_traces"] == 1
+    # the pallas rows must dispatch through the registry, not fall back
+    for row in on_disk["rows"]:
+        if row["backend"] != "xla":
+            assert row["dispatch"]["decode"]["backend"] != "xla"
 
     # trace artifacts: JSONL summarizes, chrome form loads
     summary = tel.summarize_file(artifact["trace_jsonl"])
